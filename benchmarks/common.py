@@ -1,0 +1,75 @@
+"""Shared benchmark utilities: IR metrics + timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Sequence
+
+import jax
+import numpy as np
+
+
+def dcg_at_k(rels: np.ndarray, k: int) -> float:
+    rels = np.asarray(rels)[:k]
+    gains = (2.0 ** rels - 1.0)
+    discounts = 1.0 / np.log2(np.arange(2, rels.size + 2))
+    return float(np.sum(gains * discounts))
+
+
+def ndcg_at_k(ranked_rels: np.ndarray, all_rels: np.ndarray, k: int) -> float:
+    ideal = np.sort(np.asarray(all_rels))[::-1]
+    idcg = dcg_at_k(ideal, k)
+    return dcg_at_k(ranked_rels, k) / idcg if idcg > 0 else 0.0
+
+
+def recall_at_k(ranked_rels: np.ndarray, all_rels: np.ndarray, k: int,
+                rel_threshold: int = 2) -> float:
+    n_rel = int(np.sum(np.asarray(all_rels) >= rel_threshold))
+    if n_rel == 0:
+        return 0.0
+    got = int(np.sum(np.asarray(ranked_rels)[:k] >= rel_threshold))
+    return got / n_rel
+
+
+def average_precision(ranked_rels: np.ndarray, all_rels: np.ndarray,
+                      rel_threshold: int = 2) -> float:
+    rels = np.asarray(ranked_rels) >= rel_threshold
+    n_rel = int(np.sum(np.asarray(all_rels) >= rel_threshold))
+    if n_rel == 0:
+        return 0.0
+    hits, score = 0, 0.0
+    for i, r in enumerate(rels):
+        if r:
+            hits += 1
+            score += hits / (i + 1)
+    return score / n_rel
+
+
+def retrieval_metrics(ids: np.ndarray, relevance: np.ndarray, k: int = 10
+                      ) -> Dict[str, float]:
+    """ids (Q, >=k) ranked doc ids; relevance (Q, N) graded."""
+    ndcgs, recalls, aps = [], [], []
+    for qi in range(ids.shape[0]):
+        rel_row = np.asarray(relevance[qi])
+        ranked = rel_row[np.asarray(ids[qi])]
+        ndcgs.append(ndcg_at_k(ranked, rel_row, k))
+        recalls.append(recall_at_k(ranked, rel_row, k))
+        aps.append(average_precision(ranked[:100], rel_row))
+    return {"ndcg@10": float(np.mean(ndcgs)),
+            "recall@10": float(np.mean(recalls)),
+            "map": float(np.mean(aps))}
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds of fn(*args) (blocking on outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

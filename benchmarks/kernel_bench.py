@@ -1,0 +1,60 @@
+"""Kernel-level microbenchmarks: the fused scan vs its unfused equivalents.
+
+On CPU the Pallas interpret path is Python-slow, so the measured comparison
+is ref (ADC table-gather) vs decode-then-matmul vs float scan — the HBM-
+traffic argument (DESIGN.md §2) is reported analytically per variant and
+verified against the dry-run roofline terms for the colpali serve cell.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import late_interaction as li
+from repro.core import quantization as quant
+
+
+def run(verbose: bool = True) -> List[dict]:
+    key = jax.random.PRNGKey(0)
+    B, Mq, D, N, Md, K = 8, 32, 128, 4096, 32, 256
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Mq, D))
+    docs = jax.random.normal(ks[1], (N, Md, D))
+    cb = jax.random.normal(ks[2], (K, D))
+    codes = quant.quantize(docs, cb)
+    qm = jnp.ones((B, Mq), bool)
+    dm = jnp.ones((N, Md), bool)
+
+    variants = {
+        "float_scan": jax.jit(lambda: li.maxsim(q, qm, docs, dm)),
+        "decode_then_scan": jax.jit(
+            lambda: li.quantized_maxsim_decode(q, qm, codes, dm, cb)),
+        "fused_adc_scan": jax.jit(
+            lambda: li.quantized_maxsim(q, qm, codes, dm, cb)),
+    }
+    # analytic HBM bytes per scan (corpus side only)
+    traffic = {
+        "float_scan": N * Md * D * 4,
+        "decode_then_scan": N * Md * D * 4 + N * Md,   # decoded corpus + codes
+        "fused_adc_scan": N * Md,                      # codes only
+    }
+    rows = []
+    for name, fn in variants.items():
+        t = time_fn(fn)
+        rows.append({"kernel": name, "ms": t * 1e3,
+                     "corpus_bytes": traffic[name],
+                     "traffic_ratio_vs_float": traffic["float_scan"]
+                     / traffic[name]})
+        if verbose:
+            print(f"  {name:18s} {t*1e3:9.2f} ms   corpus-read "
+                  f"{traffic[name]/1e6:8.2f} MB  "
+                  f"({traffic['float_scan']/traffic[name]:5.0f}x less "
+                  f"than float)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,101 @@
+"""Roofline report: renders EXPERIMENTS.md §Roofline tables from the
+dry-run JSON (launch/dryrun.py --out).
+
+  PYTHONPATH=src python -m benchmarks.roofline \
+      --single benchmarks/results/dryrun_single.json \
+      [--multi benchmarks/results/dryrun_multi.json] [--md out.md]
+
+Terms (per device, TPU v5e constants from launch/mesh.py):
+  compute    = HLO_FLOPs / 197 TFLOP/s
+  memory     = HLO bytes-accessed / 819 GB/s
+  collective = per-device collective link bytes / 50 GB/s
+roofline_frac = (MODEL_FLOPS/chips / peak) / max(term) — how close the
+*useful* model math runs to the hardware bound given the compiled program.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+
+def load(path: str) -> List[dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r: dict) -> str:
+    ro = r["roofline"]
+    mem = r["mem"]
+    coll = r["collective_bytes_per_dev"]
+    coll_total = sum(v for k, v in coll.items() if k != "count")
+    return ("| {arch} | {shape} | {chips} | {c:.2e} | {m:.2e} | {x:.2e} | "
+            "{dom} | {useful:.2f} | {frac:.3f} | {gib:.2f} | {fits} |"
+            .format(arch=r["arch"], shape=r["shape"], chips=r["chips"],
+                    c=ro["compute_s"], m=ro["memory_s"],
+                    x=ro["collective_s"], dom=ro["dominant"],
+                    useful=ro["useful_flops_ratio"],
+                    frac=ro["roofline_frac"],
+                    gib=mem["peak_bytes"] / 2 ** 30,
+                    fits="yes" if mem["fits_16g"] else "NO"))
+
+
+HEADER = ("| arch | shape | chips | compute (s) | memory (s) | "
+          "collective (s) | bound | useful-flops | roofline-frac | "
+          "GiB/dev | fits 16G |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def pick_hillclimb(rows: List[dict]) -> Dict[str, dict]:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    worst = min(ok, key=lambda r: r["roofline"]["roofline_frac"] or 1e9)
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"])
+    paper = next((r for r in ok if r["arch"] == "colpali-hpc"
+                  and r["shape"] == "serve_query"), None)
+    return {"worst_roofline": worst, "most_collective_bound": coll,
+            "paper_representative": paper}
+
+
+def render(single: List[dict], multi: Optional[List[dict]] = None) -> str:
+    out = ["### Roofline table — single pod (16x16 = 256 chips)", "",
+           HEADER]
+    for r in single:
+        if r.get("status") == "ok":
+            out.append(fmt_row(r))
+        elif r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                       f"skipped | — | — | — | — |")
+    if multi:
+        out += ["", "### Multi-pod (2x16x16 = 512 chips)", "", HEADER]
+        for r in multi:
+            if r.get("status") == "ok":
+                out.append(fmt_row(r))
+    picks = pick_hillclimb(single)
+    out += ["", "### Hillclimb picks", ""]
+    for why, r in picks.items():
+        if r is not None:
+            out.append(f"- **{why}**: {r['arch']}/{r['shape']} "
+                       f"(dominant={r['roofline']['dominant']}, "
+                       f"frac={r['roofline']['roofline_frac']:.3f})")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", required=True)
+    ap.add_argument("--multi", default=None)
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args(argv)
+    single = load(args.single)
+    multi = load(args.multi) if args.multi else None
+    text = render(single, multi)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.md}")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

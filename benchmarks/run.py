@@ -1,0 +1,75 @@
+"""Benchmark harness: one module per paper table.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints a ``name,us_per_call,derived`` CSV summary at the end (one row per
+benchmark), after each table's detailed output.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (kernel_bench, latency, rag_bench, retrieval_quality,
+                        storage)
+from benchmarks.common import csv_row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer RAG generator steps")
+    args = ap.parse_args(argv)
+
+    csv = []
+
+    print("== Table I/II: retrieval quality (ViDoRe-like / SEC-like) ==")
+    t0 = time.perf_counter()
+    q_rows = retrieval_quality.run()
+    dt = time.perf_counter() - t0
+    hpc_row = [r for r in q_rows
+               if r["model"] == "HPC(K=256,p=60)"][0]
+    csv.append(csv_row("retrieval_quality", dt * 1e6,
+                       f"ndcg_drop={hpc_row['ndcg_drop_vs_full']:.4f}"))
+
+    print("== Table III: storage footprint ==")
+    t0 = time.perf_counter()
+    s_rows = storage.run()
+    dt = time.perf_counter() - t0
+    r32 = [r for r in s_rows if "PQ-16" in r["config"]][0]
+    csv.append(csv_row("storage", dt * 1e6, f"pq16_ratio={r32['ratio']:.1f}x"))
+
+    print("== Table IV: query latency / throughput ==")
+    t0 = time.perf_counter()
+    l_rows = latency.run()
+    dt = time.perf_counter() - t0
+    hpc_l = [r for r in l_rows if r["config"] == "HPC(K=256,p=60)"][0]
+    csv.append(csv_row("latency", hpc_l["ms_per_query"] * 1e3,
+                       f"speedup={hpc_l['speedup_vs_full']:.2f}x"))
+
+    print("== Table V: RAG legal summarisation ==")
+    t0 = time.perf_counter()
+    r_rows = rag_bench.run(steps=120 if args.fast else 300)
+    dt = time.perf_counter() - t0
+    full = [r for r in r_rows if r["retriever"] == "ColPali-Full"][0]
+    hpc_r = [r for r in r_rows if r["retriever"] == "HPC(K=256,p=60)"][0]
+    csv.append(csv_row(
+        "rag", dt * 1e6,
+        f"halluc_full={full['hallucination']:.3f};"
+        f"halluc_hpc={hpc_r['hallucination']:.3f};"
+        f"lat_ratio={hpc_r['latency_ms']/max(full['latency_ms'],1e-9):.2f}"))
+
+    print("== Kernel microbench: fused decode-and-score ==")
+    k_rows = kernel_bench.run()
+    fused = [r for r in k_rows if r["kernel"] == "fused_adc_scan"][0]
+    csv.append(csv_row("kernel_fused_adc", fused["ms"] * 1e3,
+                       f"traffic_saving={fused['traffic_ratio_vs_float']:.0f}x"))
+
+    print("\nname,us_per_call,derived")
+    for row in csv:
+        print(row)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,59 @@
+"""Quickstart: build an HPC-ColPali index over a synthetic corpus, query
+it in every mode, and print the quality/storage trade-off.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import numpy as np
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import retrieval_metrics
+from repro.core import pipeline as hpc
+from repro.data import synthetic
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    print("building synthetic corpus (1024 docs x 32 patches x 128 dim)...")
+    spec = synthetic.CorpusSpec(n_docs=1024, n_queries=64, n_topics=24,
+                                patches_per_topic=10, noise=0.2,
+                                salient_frac=0.4)
+    data = synthetic.make_retrieval_corpus(key, spec)
+
+    configs = {
+        "ColPali-Full (fp32)": hpc.HPCConfig(mode="float",
+                                             prune_side="none"),
+        "HPC quantized K=256 p=60": hpc.HPCConfig(k=256, p=60.0,
+                                                  mode="quantized",
+                                                  prune_side="doc",
+                                                  rerank=32),
+        "HPC binary K=512": hpc.HPCConfig(k=512, p=60.0, mode="binary",
+                                          prune_side="doc"),
+    }
+    for name, cfg in configs.items():
+        t0 = time.perf_counter()
+        index = hpc.build_index(key, data.doc_patches, data.doc_mask,
+                                data.doc_salience, cfg)
+        jax.block_until_ready(index.codebook)
+        t_build = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        _, ids = hpc.query(index, data.query_patches, data.query_mask,
+                           data.query_salience, cfg, k=10)
+        ids = jax.block_until_ready(ids)
+        t_query = (time.perf_counter() - t0) / 64 * 1e3
+
+        m = retrieval_metrics(np.asarray(ids), np.asarray(data.relevance))
+        sb = hpc.storage_bytes(index, cfg)
+        print(f"{name:28s} nDCG@10={m['ndcg@10']:.3f} "
+              f"R@10={m['recall@10']:.3f} | payload "
+              f"{sb['payload']/1e6:7.2f} MB | build {t_build:5.1f}s | "
+              f"{t_query:6.2f} ms/query")
+
+
+if __name__ == "__main__":
+    main()

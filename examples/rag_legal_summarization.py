@@ -1,0 +1,37 @@
+"""RAG legal-summarisation demo (paper Table V, §V-C):
+
+  1. builds a fact-grounded synthetic legal corpus,
+  2. trains a small generator LM to answer fact queries from retrieved
+     context (a few hundred steps),
+  3. compares retrievers (ColPali-Full vs HPC-compressed vs binary vs a
+     weak single-vector baseline) on ROUGE-L, *exactly measured*
+     hallucination rate, and end-to-end latency.
+
+  PYTHONPATH=src python examples/rag_legal_summarization.py [--steps 300]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import rag_bench
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300,
+                    help="generator training steps")
+    args = ap.parse_args()
+    rows = rag_bench.run(steps=args.steps)
+    print("\nsummary (paper Table V structure):")
+    print(f"{'retriever':22s} {'ROUGE-L':>8s} {'halluc%':>8s} "
+          f"{'ms/query':>9s}")
+    for r in rows:
+        print(f"{r['retriever']:22s} {r['rouge_l']:8.3f} "
+              f"{r['hallucination']*100:8.1f} {r['latency_ms']:9.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Serve a quantized HPC-ColPali index behind the continuous-batching
+retrieval server and fire concurrent client requests at it.
+
+  PYTHONPATH=src python examples/serve_retrieval.py
+(thin wrapper over repro.launch.serve with demo-sized defaults)
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--n-docs", "2048", "--queries", "128", "--mode", "quantized",
+          "--k", "256", "--p", "60", "--max-batch", "8"])

@@ -1,0 +1,19 @@
+"""repro — HPC-ColPali: hierarchical patch compression for multi-vector
+document retrieval, as a multi-pod JAX/TPU framework.
+
+Subpackages:
+  core/     the paper's contribution (quantization, pruning, binary,
+            late interaction, indexes, pipeline, sharded retrieval, RAG)
+  models/   LM transformers (dense/MoE/GQA), ColPali encoder, PNA GNN, recsys
+  kernels/  Pallas TPU kernels (maxsim, quantized_maxsim, hamming, kmeans)
+  data/     synthetic corpora, samplers, sharded host pipeline
+  optim/    AdamW (+ int8 moments), schedules, gradient compression
+  dist/     logical-axis sharding rules, collective helpers
+  ckpt/     atomic/async/elastic checkpointing
+  train/    fault-tolerant training loop, pipeline parallelism
+  serving/  batched retrieval serving
+  configs/  assigned architectures + the paper's own config
+  launch/   mesh, dryrun, train, serve entry points
+"""
+
+__version__ = "1.0.0"

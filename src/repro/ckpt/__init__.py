@@ -1,0 +1,3 @@
+"""Atomic / async / mesh-elastic checkpointing."""
+
+from repro.ckpt import checkpoint  # noqa: F401

@@ -1,0 +1,3 @@
+"""Architecture configs (assigned pool + the paper's own) and registry."""
+
+from repro.configs import registry  # noqa: F401

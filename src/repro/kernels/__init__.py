@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the HPC-ColPali hot paths.
+
+Kernels (TPU target; validated with interpret=True on CPU against ref.py):
+  maxsim.py            — tiled float MaxSim corpus scan
+  quantized_maxsim.py  — fused decode-and-score ADC scan (1 B/patch HBM)
+  hamming.py           — binary-mode XOR+popcount scan
+  kmeans_assign.py     — nearest-centroid assignment (K-Means E-step)
+
+Use the jit'd wrappers in ops.py; they pad, cast, and dispatch per platform.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

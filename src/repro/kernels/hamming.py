@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: binary-mode Hamming MaxSim scan (paper §III-D).
+
+sim(i, j) = bits - popcount(q_code_i XOR d_code_j), MaxSim-reduced exactly
+like the float kernel. x86 POPCNT becomes `lax.population_count` on the VPU
+(8x128 int32 lanes); there is no MXU work here — the scan is bandwidth-bound
+on the 1-2 B/patch code stream, which is the point of the binary mode.
+
+Codes arrive as int32 lanes (ops.py casts from the uint16 storage form; the
+bit-packed on-disk layout is unpacked once at load, see core/binary.py).
+
+Grid: (B, N // block_docs), doc axis innermost; the query code vector
+(Mq int32) is VMEM-resident across the sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _hamming_kernel(bits_ref, q_ref, qm_ref, d_ref, dm_ref, out_ref):
+    # bits_ref: (1, 1) i32 in SMEM  — b = ceil(log2 K)
+    # q_ref:  (1, Mq) i32; qm_ref: (1, Mq) f32
+    # d_ref:  (block_docs, Md) i32; dm_ref: (block_docs, Md) f32
+    # out_ref: (1, block_docs) f32
+    bits = bits_ref[0, 0]
+    q = q_ref[0]                                          # (Mq,)
+    d = d_ref[...]                                        # (T, Md)
+    x = jax.lax.population_count(
+        jnp.bitwise_xor(q[:, None, None], d[None, :, :])) # (Mq, T, Md)
+    sim = (bits - x).astype(jnp.float32)
+    dm = dm_ref[...]
+    sim = jnp.where(dm[None] > 0, sim, NEG_INF)
+    per_q = jnp.max(sim, axis=-1)                         # (Mq, T)
+    qm = qm_ref[0]
+    out_ref[0, :] = jnp.sum(per_q * qm[:, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_docs", "interpret"))
+def hamming_maxsim_pallas(q_codes, q_mask, d_codes, d_mask, *, bits: int,
+                          block_docs: int = 64, interpret: bool = False):
+    """q_codes (B, Mq) int, d_codes (N, Md) int, masks f32 ->
+    scores (B, N) f32.  N % block_docs == 0."""
+    b, mq = q_codes.shape
+    n, md = d_codes.shape
+    assert n % block_docs == 0, (n, block_docs)
+    mask_b = (1 << bits) - 1
+    qc = (q_codes.astype(jnp.int32) & mask_b)
+    dc = (d_codes.astype(jnp.int32) & mask_b)
+    bits_arr = jnp.full((1, 1), bits, jnp.int32)
+    grid = (b, n // block_docs)
+    return pl.pallas_call(
+        _hamming_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, mq), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, mq), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_docs, md), lambda i, j: (j, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_docs, md), lambda i, j: (j, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, block_docs), lambda i, j: (i, j),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(bits_arr, qc, q_mask.astype(jnp.float32), dc,
+      d_mask.astype(jnp.float32))

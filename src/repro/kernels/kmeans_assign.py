@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: tiled nearest-centroid assignment (K-Means E-step).
+
+dist(x, c) = ||x||^2 - 2 x.C^T + ||c||^2 ; argmin over K.
+
+The codebook (K, D) <= 512x128x4 = 256 KB stays VMEM-resident across the
+whole sweep; points stream in blocks of `block_n` rows, one MXU matmul per
+tile. ||c||^2 is folded in-kernel (recomputed per tile — K*D mults,
+negligible vs the matmul, avoids a second input stream).
+
+Grid: (N // block_n,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _assign_kernel(x_ref, c_ref, out_ref):
+    # x_ref: (block_n, D); c_ref: (K, D); out_ref: (block_n,)
+    x = x_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    c2 = jnp.sum(c * c, axis=-1)                          # (K,)
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    # ||x||^2 is constant per row — argmin unaffected; skip it.
+    d = c2[None, :] - 2.0 * xc                            # (block_n, K)
+    out_ref[...] = jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign_pallas(x, centroids, *, block_n: int = 256,
+                         interpret: bool = False):
+    """x (N, D), centroids (K, D) -> codes (N,) int32.  N % block_n == 0."""
+    n, d = x.shape
+    k, _ = centroids.shape
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((k, d), lambda i: (0, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), centroids.astype(jnp.float32))

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: tiled float MaxSim late-interaction scan.
+
+score(b, n) = sum_i q_mask[b,i] * max_j (d_mask[n,j] ? <q[b,i], d[n,j]> : -inf)
+
+Tiling (DESIGN.md §7): the query block for batch row b — (Mq, D) — stays
+resident in VMEM across the whole corpus sweep; documents stream through in
+blocks of `block_docs` docs ((block_docs*Md, D) flattened so the Q @ D^T is a
+single MXU matmul per tile). Per-tile VMEM:
+
+    Mq*D*4  +  block_docs*Md*D*4  +  Mq*block_docs*Md*4 (sims)  +  out
+
+e.g. Mq=32, Md=64, D=128, block_docs=16 -> 16 KB + 512 KB + 128 KB ≈ 0.7 MB,
+comfortably inside the ~16 MB v5e VMEM with double buffering. MXU alignment:
+choose Mq, block_docs*Md multiples of 128 where possible (ops.py pads).
+
+Grid: (B, N // block_docs); the doc axis is the fastest-varying so the Q
+block is reused N/block_docs times per HBM read (grid iteration order on
+TPU is minor-to-major: last grid dim innermost).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _maxsim_kernel(q_ref, qm_ref, d_ref, dm_ref, out_ref):
+    # q_ref:  (1, Mq, D)        VMEM
+    # qm_ref: (1, Mq)           VMEM
+    # d_ref:  (block_docs, Md, D)
+    # dm_ref: (block_docs, Md)
+    # out_ref: (1, block_docs)
+    q = q_ref[0].astype(jnp.float32)                      # (Mq, D)
+    d = d_ref[...].astype(jnp.float32)                    # (T, Md, D)
+    t, md, dd = d.shape
+    d_flat = d.reshape(t * md, dd)
+    # One MXU matmul per tile.
+    sim = jax.lax.dot_general(q, d_flat,
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    sim = sim.reshape(q.shape[0], t, md)                  # (Mq, T, Md)
+    dm = dm_ref[...]                                      # (T, Md) f32 0/1
+    sim = jnp.where(dm[None] > 0, sim, NEG_INF)
+    per_q = jnp.max(sim, axis=-1)                         # (Mq, T)
+    qm = qm_ref[0]                                        # (Mq,)
+    out_ref[0, :] = jnp.sum(per_q * qm[:, None], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_docs", "interpret"))
+def maxsim_pallas(q, q_mask, docs, d_mask, *, block_docs: int = 16,
+                  interpret: bool = False):
+    """q (B, Mq, D) f32, q_mask (B, Mq) f32, docs (N, Md, D) f32,
+    d_mask (N, Md) f32 -> scores (B, N) f32.  N % block_docs == 0."""
+    b, mq, dd = q.shape
+    n, md, _ = docs.shape
+    assert n % block_docs == 0, (n, block_docs)
+    grid = (b, n // block_docs)
+    return pl.pallas_call(
+        _maxsim_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, mq, dd), lambda i, j: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, mq), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_docs, md, dd), lambda i, j: (j, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_docs, md), lambda i, j: (j, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, block_docs), lambda i, j: (i, j),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(q.astype(jnp.float32), q_mask.astype(jnp.float32),
+      docs.astype(jnp.float32), d_mask.astype(jnp.float32))

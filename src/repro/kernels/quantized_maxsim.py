@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: fused decode-and-score ADC MaxSim — the paper's hot
+path, TPU-adapted (DESIGN.md §2).
+
+A float corpus scan reads 4*D = 512 B/patch from HBM; this kernel reads the
+1-byte code instead and resolves it against the query-centroid table
+T = Q @ C^T (built once per query batch, (Mq, K) f32 <= 64 KB) held in VMEM.
+HBM traffic drops ~32x at unchanged MaxSim semantics — converting the
+paper's storage win into the bandwidth win that a memory-bound scan needs.
+
+The in-kernel "gather" is realised as a one-hot matmul
+
+    sim = one_hot(codes, K) @ T^T        # (T*Md, K) @ (K, Mq)
+
+which runs on the MXU with perfectly regular access instead of a serialised
+VPU gather — the standard TPU idiom for small-table lookups. K <= 512 keeps
+the one-hot tile (block_docs*Md, K) in VMEM.
+
+Grid: (B, N // block_docs), doc axis innermost so the per-batch table block
+is reused across the corpus sweep.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _qmaxsim_kernel(tab_ref, qm_ref, codes_ref, dm_ref, out_ref):
+    # tab_ref:  (1, Mq, K)  query-centroid table, VMEM-resident
+    # qm_ref:   (1, Mq)
+    # codes_ref:(block_docs, Md) int32
+    # dm_ref:   (block_docs, Md) f32
+    # out_ref:  (1, block_docs)
+    tab = tab_ref[0]                                      # (Mq, K) f32
+    mq, k = tab.shape
+    codes = codes_ref[...]                                # (T, Md) i32
+    t, md = codes.shape
+    flat = codes.reshape(t * md)
+    # One-hot gather on the MXU: (T*Md, K) @ (K, Mq) -> (T*Md, Mq)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (t * md, k), 1)
+    onehot = (iota_k == flat[:, None]).astype(jnp.float32)
+    sim = jax.lax.dot_general(onehot, tab,
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    sim = sim.reshape(t, md, mq)                          # (T, Md, Mq)
+    dm = dm_ref[...]                                      # (T, Md)
+    sim = jnp.where(dm[..., None] > 0, sim, NEG_INF)
+    per_q = jnp.max(sim, axis=1)                          # (T, Mq)
+    qm = qm_ref[0]
+    out_ref[0, :] = jnp.sum(per_q * qm[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_docs", "interpret"))
+def quantized_maxsim_pallas(table, q_mask, codes, d_mask, *,
+                            block_docs: int = 32, interpret: bool = False):
+    """table (B, Mq, K) f32, q_mask (B, Mq) f32, codes (N, Md) int,
+    d_mask (N, Md) f32 -> scores (B, N) f32.  N % block_docs == 0."""
+    b, mq, k = table.shape
+    n, md = codes.shape
+    assert n % block_docs == 0, (n, block_docs)
+    grid = (b, n // block_docs)
+    return pl.pallas_call(
+        _qmaxsim_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, mq, k), lambda i, j: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, mq), lambda i, j: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_docs, md), lambda i, j: (j, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_docs, md), lambda i, j: (j, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, block_docs), lambda i, j: (i, j),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(table.astype(jnp.float32), q_mask.astype(jnp.float32),
+      codes.astype(jnp.int32), d_mask.astype(jnp.float32))

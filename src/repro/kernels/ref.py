@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are asserted against (interpret=True
+on CPU, real lowering on TPU). They intentionally mirror the kernels'
+numerical contracts: fp32 accumulation, mask conventions (float 0/1 masks),
+and -inf handling for empty doc-patch slots.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def maxsim(q: Array, q_mask: Array, docs: Array, d_mask: Array) -> Array:
+    """Float MaxSim late interaction.
+
+    q (B, Mq, D) fp; q_mask (B, Mq) f32 0/1; docs (N, Md, D); d_mask (N, Md).
+    -> scores (B, N) f32.
+    """
+    sim = jnp.einsum("bqd,nkd->bnqk", q.astype(jnp.float32),
+                     docs.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    sim = jnp.where(d_mask[None, :, None, :] > 0, sim, NEG_INF)
+    per_q = jnp.max(sim, axis=-1)                     # (B, N, Mq)
+    per_q = per_q * q_mask[:, None, :]
+    return jnp.sum(per_q, axis=-1)
+
+
+def quantized_maxsim(table: Array, q_mask: Array, codes: Array,
+                     d_mask: Array) -> Array:
+    """ADC MaxSim from a precomputed query-centroid table.
+
+    table (B, Mq, K) f32; codes (N, Md) int; d_mask (N, Md) f32 0/1.
+    -> scores (B, N) f32.
+    """
+    c = codes.astype(jnp.int32)
+    sim = table[:, :, c]                              # (B, Mq, N, Md)
+    sim = jnp.moveaxis(sim, 2, 1)                     # (B, N, Mq, Md)
+    sim = jnp.where(d_mask[None, :, None, :] > 0, sim, NEG_INF)
+    per_q = jnp.max(sim, axis=-1)
+    per_q = per_q * q_mask[:, None, :]
+    return jnp.sum(per_q, axis=-1)
+
+
+def hamming_maxsim(q_codes: Array, q_mask: Array, d_codes: Array,
+                   d_mask: Array, bits: int) -> Array:
+    """Binary-mode MaxSim: sim = bits - popcount(xor).
+
+    q_codes (B, Mq) int; d_codes (N, Md) int; masks f32 0/1.
+    -> scores (B, N) f32 (float for kernel-accum parity).
+    """
+    mask_b = jnp.uint32((1 << bits) - 1)
+    qx = q_codes.astype(jnp.uint32) & mask_b
+    dx = d_codes.astype(jnp.uint32) & mask_b
+    h = jax.lax.population_count(qx[:, :, None, None] ^ dx[None, None, :, :])
+    sim = (bits - h).astype(jnp.float32)              # (B, Mq, N, Md)
+    sim = jnp.moveaxis(sim, 2, 1)                     # (B, N, Mq, Md)
+    sim = jnp.where(d_mask[None, :, None, :] > 0, sim, NEG_INF)
+    per_q = jnp.max(sim, axis=-1)
+    per_q = per_q * q_mask[:, None, :]
+    return jnp.sum(per_q, axis=-1)
+
+
+def kmeans_assign(x: Array, centroids: Array) -> Array:
+    """Nearest centroid (squared L2). x (N, D), centroids (K, D) -> (N,) i32."""
+    x = x.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    d = x2 - 2.0 * (x @ c.T) + c2[None, :]
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)

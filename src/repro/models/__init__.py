@@ -1,0 +1,2 @@
+"""Model definitions: LM transformers (dense/MoE/GQA/chunked-local
+attention), the ColPali retrieval encoder, PNA GNN, and recsys models."""

@@ -1,0 +1,160 @@
+"""ColPali-style retrieval encoder: the paper's backbone (ColQwen2.5 class).
+
+Architecture (DESIGN.md §2, §5):
+  * the *modality frontend is a stub* per the assignment — documents arrive
+    as precomputed patch embeddings (B, M_patches, d_patch), exactly what a
+    frozen vision tower would emit; `input_specs` hands over
+    ShapeDtypeStructs for them;
+  * a `patch_proj` maps patches into the LM's d_model; queries are token
+    ids through the LM embedding table;
+  * the LM backbone (any assigned LM config — qwen2-1.5b by default, the
+    public ColQwen2.5 backbone family) contextualises the sequence;
+  * `out_proj` maps hidden states to the D=128 retrieval space, L2-
+    normalised (ColBERT convention);
+  * the backbone's final-layer attention mass per position is returned as
+    the *salience* signal that drives the paper's §III-C pruning.
+
+Training: in-batch contrastive late interaction (ColPali's objective):
+softmax over MaxSim(query_i, doc_j) with the matching doc on the diagonal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import late_interaction as li
+from repro.dist.sharding import NULL
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.optim import optimizer as opt
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ColPaliConfig:
+    name: str = "colpali"
+    backbone: T.LMConfig = dataclasses.field(default_factory=T.LMConfig)
+    d_patch: int = 768           # frozen vision-tower output dim (stub)
+    proj_dim: int = 128          # retrieval embedding dim (paper: D=128)
+    n_patches: int = 64          # patches per document page
+    query_len: int = 32          # query token budget
+    temperature: float = 0.02
+
+    def param_count(self) -> int:
+        return (self.backbone.param_count()
+                + self.d_patch * self.backbone.d_model
+                + self.backbone.d_model * self.proj_dim)
+
+
+def init(key: Array, cfg: ColPaliConfig) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "backbone": T.init(k1, cfg.backbone),
+        "patch_proj": L.dense_init(k2, cfg.d_patch, cfg.backbone.d_model,
+                                   cfg.backbone.pdtype),
+        "out_proj": L.dense_init(k3, cfg.backbone.d_model, cfg.proj_dim,
+                                 cfg.backbone.pdtype),
+    }
+
+
+def param_specs(cfg: ColPaliConfig) -> Dict[str, Any]:
+    return {
+        "backbone": T.param_specs(cfg.backbone),
+        "patch_proj": (None, "embed"),
+        "out_proj": ("embed", None),
+    }
+
+
+def _backbone_over_embeddings(params, x: Array, cfg: T.LMConfig, shd,
+                              want_salience: bool):
+    """Run the LM blocks over already-embedded inputs (B, S, D)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    chunked = cfg.layer_is_chunked()
+    n_l = cfg.n_layers
+
+    def body(carry, xs):
+        x = carry
+        bp, is_chunked, is_last = xs
+        fn = lambda bp_, x_: T._block_apply(bp_, x_, positions, is_chunked,
+                                            cfg, shd, want_salience)
+        x, aux, sal = jax.checkpoint(fn)(bp, x)
+        if sal is None:
+            sal = jnp.zeros((b, s), jnp.float32)
+        sal = jnp.where(is_last, sal, 0.0)
+        return x, sal
+
+    is_last = jnp.arange(n_l) == n_l - 1
+    x, sals = jax.lax.scan(body, x, (params["blocks"], chunked, is_last),
+                           unroll=n_l if cfg.unroll else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    sal = jnp.sum(sals, axis=0)
+    return x, sal
+
+
+def encode_doc(params, patches: Array, patch_mask: Array,
+               cfg: ColPaliConfig, shd=NULL) -> Tuple[Array, Array]:
+    """patches (B, M, d_patch) -> (embeddings (B, M, proj_dim), salience).
+
+    Embeddings are L2-normalised; padded patches zeroed.
+    """
+    x = (patches.astype(cfg.backbone.adtype)
+         @ params["patch_proj"].astype(cfg.backbone.adtype))
+    x = shd.constraint(x, "batch", None, None)
+    h, sal = _backbone_over_embeddings(params["backbone"], x, cfg.backbone,
+                                       shd, True)
+    e = h @ params["out_proj"].astype(h.dtype)
+    e = e / jnp.maximum(jnp.linalg.norm(e.astype(jnp.float32), axis=-1,
+                                        keepdims=True), 1e-6).astype(e.dtype)
+    e = e * patch_mask[..., None].astype(e.dtype)
+    sal = sal * patch_mask.astype(sal.dtype)
+    return e.astype(jnp.float32), sal
+
+
+def encode_query(params, tokens: Array, token_mask: Array,
+                 cfg: ColPaliConfig, shd=NULL) -> Tuple[Array, Array]:
+    """tokens (B, Lq) int32 -> (embeddings (B, Lq, proj_dim), salience)."""
+    x = jnp.take(params["backbone"]["embed"], tokens, axis=0)
+    x = x.astype(cfg.backbone.adtype)
+    h, sal = _backbone_over_embeddings(params["backbone"], x, cfg.backbone,
+                                       shd, True)
+    e = h @ params["out_proj"].astype(h.dtype)
+    e = e / jnp.maximum(jnp.linalg.norm(e.astype(jnp.float32), axis=-1,
+                                        keepdims=True), 1e-6).astype(e.dtype)
+    e = e * token_mask[..., None].astype(e.dtype)
+    sal = sal * token_mask.astype(sal.dtype)
+    return e.astype(jnp.float32), sal
+
+
+def contrastive_loss(params, batch: Dict[str, Array], cfg: ColPaliConfig,
+                     shd=NULL) -> Tuple[Array, Dict[str, Array]]:
+    """In-batch late-interaction contrastive loss (ColPali training).
+
+    batch: query_tokens (B, Lq), query_mask, doc_patches (B, M, d_patch),
+    doc_mask. Positive pairs on the diagonal.
+    """
+    q, _ = encode_query(params, batch["query_tokens"], batch["query_mask"],
+                        cfg, shd)
+    d, _ = encode_doc(params, batch["doc_patches"], batch["doc_mask"],
+                      cfg, shd)
+    scores = li.maxsim(q, batch["query_mask"], d, batch["doc_mask"])
+    scores = scores / cfg.temperature
+    b = scores.shape[0]
+    labels = jnp.arange(b)
+    logz = jax.scipy.special.logsumexp(scores, axis=-1)
+    gold = scores[jnp.arange(b), labels]
+    loss = jnp.mean(logz - gold)
+    acc = jnp.mean(jnp.argmax(scores, -1) == labels)
+    return loss, {"acc": acc}
+
+
+def train_step(params, opt_state, batch, cfg: ColPaliConfig,
+               opt_cfg: opt.AdamWConfig, shd=NULL):
+    (loss, parts), grads = jax.value_and_grad(contrastive_loss, has_aux=True)(
+        params, batch, cfg, shd)
+    params, opt_state, om = opt.update(opt_cfg, grads, opt_state, params)
+    return params, opt_state, {"loss": loss, **parts, **om}

@@ -1,0 +1,194 @@
+"""PNA — Principal Neighbourhood Aggregation GNN (arXiv:2004.05718).
+
+Message passing is built on jax.ops.segment_sum / segment_max / segment_min
+over an edge-index (DESIGN.md: JAX has no CSR SpMM — the scatter/segment
+formulation IS the system here). A PNA layer:
+
+    m_e   = MLP_pre([h_src, h_dst])                  per edge
+    agg_a = segment_{mean,max,min,std}(m_e -> dst)   4 aggregators
+    scaled= agg_a * {1, log(d+1)/delta, delta/log(d+1)}   3 scalers
+    h'    = h + MLP_post([h, concat_{a,s} scaled])   residual update
+
+Supports node classification (full-graph / sampled-subgraph) and batched
+small-graph property prediction (mean readout per graph id).
+
+Sharding: edges shard flat over all mesh axes ("edge" rule) and node
+tensors over ("nodes") — cells pad both counts so they divide every mesh;
+GSPMD reduces per-shard segment partials with one collective per
+aggregator. Paper-technique applicability: K-Means feature quantization
+optionally compresses the input node features (DESIGN.md §5); attention
+pruning does not apply (PNA is attention-free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import NULL
+from repro.models import layers as L
+from repro.optim import optimizer as opt
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_feat: int = 1433
+    n_classes: int = 7
+    delta: float = 2.5              # avg log-degree normaliser (PNA eq. 5)
+    task: str = "node"              # "node" | "graph"
+    param_dtype: str = "float32"
+
+    @property
+    def pdtype(self):
+        return jnp.bfloat16 if self.param_dtype == "bfloat16" else jnp.float32
+
+    def param_count(self) -> int:
+        d = self.d_hidden
+        per_layer = (2 * d) * d + (d + 12 * d) * d + d * d
+        return self.d_feat * d + self.n_layers * per_layer + d * self.n_classes
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": L.dense_init(ks[i], dims[i], dims[i + 1], dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)]
+
+
+def _mlp_specs(dims):
+    return [{"w": (None, None), "b": (None,)} for _ in range(len(dims) - 1)]
+
+
+def _mlp_apply(layers, x, act=jax.nn.relu):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1:
+            x = act(x)
+    return x
+
+
+def init(key: Array, cfg: PNAConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(ks[i])
+        layers.append({
+            "pre": _mlp_init(k1, (2 * d, d), cfg.pdtype),
+            "post": _mlp_init(k2, (13 * d, d), cfg.pdtype),  # h + 12 aggs
+        })
+    return {
+        "encoder": _mlp_init(ks[-2], (cfg.d_feat, d), cfg.pdtype),
+        "layers": layers,
+        "head": _mlp_init(ks[-1], (d, cfg.n_classes), cfg.pdtype),
+    }
+
+
+def param_specs(cfg: PNAConfig) -> Dict[str, Any]:
+    layers = [{"pre": _mlp_specs((0, 0)), "post": _mlp_specs((0, 0))}
+              for _ in range(cfg.n_layers)]
+    return {
+        "encoder": _mlp_specs((0, 0)),
+        "layers": layers,
+        "head": _mlp_specs((0, 0)),
+    }
+
+
+def _pna_aggregate(msgs: Array, dst: Array, n_nodes: int, deg: Array,
+                   delta: float) -> Array:
+    """msgs (E, d), dst (E,) -> (N, 12*d) [4 aggregators x 3 scalers]."""
+    ones = jnp.ones((msgs.shape[0],), msgs.dtype)
+    cnt = jnp.maximum(jax.ops.segment_sum(ones, dst, num_segments=n_nodes), 1.0)
+    s = jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+    mean = s / cnt[:, None]
+    sq = jax.ops.segment_sum(msgs * msgs, dst, num_segments=n_nodes)
+    std = jnp.sqrt(jnp.maximum(sq / cnt[:, None] - mean * mean, 0.0) + 1e-5)
+    mx = jax.ops.segment_max(msgs, dst, num_segments=n_nodes)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    mn = jax.ops.segment_min(msgs, dst, num_segments=n_nodes)
+    mn = jnp.where(jnp.isfinite(mn), mn, 0.0)
+    agg = jnp.concatenate([mean, mx, mn, std], axis=-1)   # (N, 4d)
+
+    logd = jnp.log(deg + 1.0)[:, None]
+    amp = logd / delta
+    att = delta / jnp.maximum(logd, 1e-5)
+    return jnp.concatenate([agg, agg * amp, agg * att], axis=-1)  # (N, 12d)
+
+
+def forward(params: Dict[str, Any], feats: Array, edge_index: Array,
+            cfg: PNAConfig, shd=NULL, graph_ids: Optional[Array] = None,
+            n_graphs: int = 0) -> Array:
+    """feats (N, d_feat), edge_index (2, E) int32 -> logits.
+
+    node task: (N, n_classes); graph task: (n_graphs, n_classes)
+    (mean readout over graph_ids).
+    """
+    n = feats.shape[0]
+    src, dst = edge_index[0], edge_index[1]
+    h = _mlp_apply(params["encoder"], feats.astype(cfg.pdtype))
+    h = shd.constraint(h, "nodes", None)
+    deg = jax.ops.segment_sum(jnp.ones((src.shape[0],), h.dtype), dst,
+                              num_segments=n)
+
+    for lp in params["layers"]:
+        # gathered edge tensors are edge-sharded (the big buffers at
+        # ogb_products scale: 62M x 2d); node tensors node-sharded
+        h_src = shd.constraint(jnp.take(h, src, axis=0), "edge", None)
+        h_dst = shd.constraint(jnp.take(h, dst, axis=0), "edge", None)
+        msgs = _mlp_apply(lp["pre"], jnp.concatenate([h_src, h_dst], -1))
+        msgs = shd.constraint(msgs, "edge", None)
+        agg = _pna_aggregate(msgs, dst, n, deg, cfg.delta)
+        agg = shd.constraint(agg, "nodes", None)
+        upd = _mlp_apply(lp["post"], jnp.concatenate([h, agg], -1))
+        h = h + jax.nn.relu(upd)
+        h = shd.constraint(h, "nodes", None)
+
+    if cfg.task == "graph":
+        assert graph_ids is not None and n_graphs > 0
+        pooled = jax.ops.segment_sum(h, graph_ids, num_segments=n_graphs)
+        cnt = jnp.maximum(jax.ops.segment_sum(
+            jnp.ones((n,), h.dtype), graph_ids, num_segments=n_graphs), 1.0)
+        h = pooled / cnt[:, None]
+    return _mlp_apply(params["head"], h).astype(jnp.float32)
+
+
+def loss_fn(params, batch: Dict[str, Array], cfg: PNAConfig, shd=NULL):
+    """CE on labelled nodes (label -1 = unlabelled/padding) or graphs."""
+    logits = forward(params, batch["feats"], batch["edge_index"], cfg, shd,
+                     graph_ids=batch.get("graph_ids"),
+                     n_graphs=int(batch["graph_labels"].shape[0])
+                     if "graph_labels" in batch else 0)
+    labels = (batch["graph_labels"] if "graph_labels" in batch
+              else batch["labels"])
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    ce = jnp.where(valid, logz - gold, 0.0)
+    loss = jnp.sum(ce) / jnp.maximum(jnp.sum(valid), 1)
+    acc = jnp.sum(jnp.where(valid, jnp.argmax(logits, -1) == labels, 0)) \
+        / jnp.maximum(jnp.sum(valid), 1)
+    return loss, {"acc": acc}
+
+
+def train_step(params, opt_state, batch, cfg: PNAConfig,
+               opt_cfg: opt.AdamWConfig, shd=NULL):
+    (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch, cfg, shd)
+    params, opt_state, om = opt.update(opt_cfg, grads, opt_state, params)
+    return params, opt_state, {"loss": loss, **parts, **om}
+
+
+def serve_step(params, batch, cfg: PNAConfig, shd=NULL):
+    """Inference forward (full-batch scoring)."""
+    return forward(params, batch["feats"], batch["edge_index"], cfg, shd,
+                   graph_ids=batch.get("graph_ids"),
+                   n_graphs=int(batch["graph_labels"].shape[0])
+                   if "graph_labels" in batch else 0)

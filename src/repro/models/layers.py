@@ -1,0 +1,443 @@
+"""Shared model building blocks (pure JAX, init/apply style).
+
+Every init function returns a nested dict of arrays; a parallel *_specs
+function returns the same structure with logical-axis tuples for
+dist/sharding.py. Tests assert the trees match for every arch config.
+
+Conventions:
+  * matmuls run in the activation dtype with fp32 accumulation
+    (preferred_element_type), norms and softmax in fp32;
+  * attention is GQA with RoPE; an optional chunked-local mode (Llama-4
+    iRoPE-style: attend only within a fixed chunk window) makes the decode
+    path sub-quadratic for the long_500k cell;
+  * the query axis is processed in chunks via lax.scan (flash-style memory
+    bound: scores never materialise beyond (B, H, q_chunk, K));
+  * MoE uses sort-based grouped matmuls with a static capacity factor
+    (dropping, Switch-style aux loss). Expert weights are stacked (E, ...)
+    so EP is a sharding annotation, not a code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import NULL
+
+Array = jax.Array
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, in_dim: int, out_dim: int, dtype) -> Array:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, dim: int, dtype) -> Array:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, w: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, H, hd), positions (..., S) -> rotated x."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                     # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (flash-style q-chunk scan; full or chunked-local mask)
+# ---------------------------------------------------------------------------
+
+def attn_init(key: Array, d_model: int, n_heads: int, n_kv: int,
+              head_dim: int, qkv_bias: bool, dtype) -> Dict[str, Array]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def attn_specs(qkv_bias: bool) -> Dict[str, tuple]:
+    s = {
+        "wq": ("embed", "qkv_out"),
+        "wk": ("embed", "kv_out"),
+        "wv": ("embed", "kv_out"),
+        "wo": ("qkv_out", "embed"),
+    }
+    if qkv_bias:
+        s["bq"] = ("qkv_out",)
+        s["bk"] = ("kv_out",)
+        s["bv"] = ("kv_out",)
+    return s
+
+
+def _qkv(p, x, n_heads, n_kv, head_dim):
+    b, s, _ = x.shape
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return (q.reshape(b, s, n_heads, head_dim),
+            k.reshape(b, s, n_kv, head_dim),
+            v.reshape(b, s, n_kv, head_dim))
+
+
+def _sdpa_chunk(q_blk, k, v, mask_blk):
+    """q_blk (B, qc, Hkv, G, hd); k/v (B, T, Hkv, hd); mask (B?, qc, T).
+
+    Returns (out (B, qc, Hkv, G, hd), attn_mass (B, T)) — attn_mass is the
+    per-key attention mass (summed over heads/queries) for salience.
+    """
+    hd = q_blk.shape[-1]
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", q_blk, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(mask_blk[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    mass = jnp.sum(probs, axis=(1, 2, 3))                # (B, T)
+    return out, mass
+
+
+def attention(p: Dict[str, Array], x: Array, positions: Array, *,
+              n_heads: int, n_kv: int, head_dim: int, theta: float,
+              chunk: int = 0, q_chunk: int = 512, shd=NULL,
+              want_salience: bool = False,
+              unroll: bool = False) -> Tuple[Array, Optional[Array]]:
+    """Causal (optionally chunked-local) self-attention over x (B, S, D).
+
+    chunk > 0 limits attention to the iRoPE-style window
+    [floor(i/chunk)*chunk, i]. q_chunk bounds the materialised score block.
+    """
+    b, s, _ = x.shape
+    g = n_heads // n_kv
+    q, k, v = _qkv(p, x, n_heads, n_kv, head_dim)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    # §Perf iteration glm-1: no explicit q/k constraints — the fused
+    # qkv_out/kv_out weight shardings already pin the projection outputs,
+    # and forcing a head-sharded layout here made GSPMD replicate-and-
+    # repartition k/v every layer ("involuntary full rematerialization"),
+    # dominating the collective term (38.5 s on glm4-9b/train_4k).
+
+    qc = min(q_chunk, s)
+    while s % qc != 0:
+        qc //= 2
+    n_blocks = s // qc
+    local = chunk > 0 and chunk < s
+    if local:
+        # q blocks must not straddle window boundaries
+        assert chunk % qc == 0, (chunk, qc)
+        # pad keys so the last window's slice stays in bounds
+        pad = (-s) % chunk
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = q.reshape(b, n_blocks, qc, n_kv, g, head_dim)
+
+    def body(carry, blk):
+        mass_acc = carry
+        q_blk, blk_idx = blk
+        s0 = blk_idx * qc
+        i = s0 + jnp.arange(qc)[:, None]                 # (qc, 1) global q pos
+        if local:
+            w0 = (s0 // chunk) * chunk                   # window start (static)
+            k_win = jax.lax.dynamic_slice_in_dim(k, w0, chunk, axis=1)
+            v_win = jax.lax.dynamic_slice_in_dim(v, w0, chunk, axis=1)
+            j = w0 + jnp.arange(chunk)[None, :]
+            mask = (j <= i)
+            out_blk, mass = _sdpa_chunk(q_blk, k_win, v_win,
+                                        jnp.broadcast_to(mask, (b, qc, chunk)))
+            mass_acc = jax.lax.dynamic_update_slice_in_dim(
+                mass_acc, jax.lax.dynamic_slice_in_dim(
+                    mass_acc, w0, chunk, axis=1) + mass, w0, axis=1)
+        else:
+            j = jnp.arange(s)[None, :]
+            mask = (j <= i)
+            out_blk, mass = _sdpa_chunk(q_blk, k, v,
+                                        jnp.broadcast_to(mask, (b, qc, s)))
+            mass_acc = mass_acc + mass
+        return mass_acc, out_blk
+
+    s_pad = k.shape[1]                                   # s, or padded to chunk
+    mass0 = jnp.zeros((b, s_pad), jnp.float32)
+    blk_ids = jnp.arange(n_blocks)
+    qg_t = jnp.moveaxis(qg, 1, 0)                        # (n_blocks, b, qc, ...)
+    # Inner remat: without it the q-chunk scan saves every chunk's (H, qc,
+    # T) probability block for the backward pass — O(S^2) memory per layer.
+    # Checkpointing the body keeps only (carry, ys) and recomputes probs in
+    # bwd (flash-attention memory behaviour in pure jnp).
+    mass, outs = jax.lax.scan(jax.checkpoint(body), mass0, (qg_t, blk_ids),
+                              unroll=n_blocks if unroll else 1)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, n_heads * head_dim)
+    out = out @ p["wo"].astype(out.dtype)
+    sal = mass[:, :s] / s if want_salience else None
+    return out, sal
+
+
+def attention_decode(p: Dict[str, Array], x: Array, pos: Array,
+                     k_cache: Array, v_cache: Array, *,
+                     n_heads: int, n_kv: int, head_dim: int, theta: float,
+                     chunk: int = 0, shd=NULL
+                     ) -> Tuple[Array, Array, Array]:
+    """Single-token decode. x (B, 1, D); caches (B, S, n_kv, hd); pos () i32.
+
+    Returns (out (B, 1, D), new_k_cache, new_v_cache). For chunked-local
+    layers only a static `chunk`-sized window of the cache is touched
+    (sub-quadratic decode, DESIGN.md §6).
+    """
+    b, _, _ = x.shape
+    s_max = k_cache.shape[1]
+    g = n_heads // n_kv
+    q, k_new, v_new = _qkv(p, x, n_heads, n_kv, head_dim)
+    posb = jnp.full((b, 1), pos)
+    q = apply_rope(q, posb, theta)
+    k_new = apply_rope(k_new, posb, theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, pos, axis=1)
+
+    if chunk > 0 and chunk < s_max:
+        # cache length must tile into windows (enforced by init_cache)
+        assert s_max % chunk == 0, (s_max, chunk)
+        w0 = (pos // chunk) * chunk
+        k_att = jax.lax.dynamic_slice_in_dim(k_cache, w0, chunk, axis=1)
+        v_att = jax.lax.dynamic_slice_in_dim(v_cache, w0, chunk, axis=1)
+        j = w0 + jnp.arange(chunk)[None, :]
+    else:
+        k_att, v_att = k_cache, v_cache
+        j = jnp.arange(s_max)[None, :]
+
+    mask = jnp.broadcast_to(j <= pos, (b, 1, j.shape[1]))
+    qg = q.reshape(b, 1, n_kv, g, head_dim)
+    out, _ = _sdpa_chunk(qg, k_att, v_att, mask)
+    out = out.reshape(b, 1, n_heads * head_dim) @ p["wo"].astype(x.dtype)
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN: dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def ffn_init(key: Array, d_model: int, d_ff: int, dtype) -> Dict[str, Array]:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def ffn_specs() -> Dict[str, tuple]:
+    return {
+        "w_gate": ("embed", "mlp"),
+        "w_up": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+
+
+def ffn_apply(p: Dict[str, Array], x: Array) -> Array:
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    return h @ p["w_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN: top-k routing, sort-based grouped matmul, capacity dropping
+# ---------------------------------------------------------------------------
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    import math
+    c = math.ceil(n_tokens * top_k * capacity_factor / n_experts)
+    return max(8, -(-c // 8) * 8)   # round up to a multiple of 8
+
+
+def moe_init(key: Array, d_model: int, d_ff: int, n_experts: int,
+             n_shared: int, dtype) -> Dict[str, Array]:
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / jnp.sqrt(d_model)
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, n_experts))
+                   * scale).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (n_experts, d_model, d_ff))
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (n_experts, d_model, d_ff))
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (n_experts, d_ff, d_model))
+                   * (1.0 / jnp.sqrt(d_ff))).astype(dtype),
+    }
+    if n_shared:
+        p["shared"] = ffn_init(ks[4], d_model, d_ff * n_shared, dtype)
+    return p
+
+
+def moe_specs(n_shared: int) -> Dict[str, Any]:
+    s = {
+        "router": ("embed", None),
+        "w_gate": ("expert", "embed", "expert_mlp"),
+        "w_up": ("expert", "embed", "expert_mlp"),
+        "w_down": ("expert", "expert_mlp", "embed"),
+    }
+    if n_shared:
+        s["shared"] = ffn_specs()
+    return s
+
+
+def moe_apply(p: Dict[str, Array], x: Array, *, top_k: int,
+              capacity_factor: float = 1.25, shd=NULL,
+              expert_chunks: int = 1) -> Tuple[Array, Array]:
+    """x (T, D) -> (out (T, D), aux_loss ()).
+
+    Grouped expert-parallel dispatch (EXPERIMENTS.md §Perf iteration moe-2):
+    tokens are split into G groups matching the data sharding of the token
+    dim, so routing / capacity grouping / gathers are *per-group batched
+    ops* that GSPMD keeps local (no global gather that would replicate the
+    (E, C, D) buffer). The two sharding constraints around the expert
+    einsums flip the sharded dim group->expert and back, which the
+    partitioner lowers to the canonical pair of all-to-alls of EP:
+
+      (G@dp, E, Cg, D) --a2a--> (G, E@dp, Cg, D) -> expert FFN
+                       <--a2a-- back, local combine per group.
+
+    Capacity is per-group: Cg = ceil(T/G * k * cf / E) (Switch-style drops
+    are now per data shard, as in real EP systems).
+    """
+    t, d = x.shape
+    e = p["w_gate"].shape[0]
+    g = shd.num_shards("tokens", t)
+    tg = t // g
+    c = moe_capacity(tg, e, top_k, capacity_factor)
+
+    xg_tok = shd.constraint(x.reshape(g, tg, d), "tokens", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg_tok.astype(jnp.float32),
+                        p["router"])                       # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)                # (G, Tg, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    flat_e = idx.reshape(g, tg * top_k)
+    flat_t = jnp.broadcast_to(
+        jnp.arange(tg * top_k, dtype=jnp.int32) // top_k, (g, tg * top_k))
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)       # (G, Tg*k)
+    st = jnp.take_along_axis(flat_t, order, axis=-1)
+    counts = jax.vmap(lambda fe: jax.ops.segment_sum(
+        jnp.ones_like(fe, jnp.int32), fe, num_segments=e))(flat_e)
+    group_start = jnp.cumsum(counts, axis=-1) - counts     # (G, E) exclusive
+    pos = (jnp.arange(tg * top_k, dtype=jnp.int32)[None]
+           - jnp.take_along_axis(group_start, se, axis=-1))
+    keep = pos < c
+    target = jnp.where(keep, se * c + pos, e * c)          # (G, Tg*k)
+
+    def build_slots(tgt, st_):
+        tfs = jnp.full((e * c + 1,), tg, jnp.int32)
+        return tfs.at[tgt].set(st_, mode="drop")[:e * c]
+    token_for_slot = jax.vmap(build_slots)(target, st)     # (G, E*C)
+
+    x_pad = jnp.concatenate(
+        [xg_tok, jnp.zeros((g, 1, d), x.dtype)], axis=1)   # (G, Tg+1, D)
+    gate_sorted = jnp.take_along_axis(
+        gate.reshape(g, tg * top_k), order, axis=-1).astype(x.dtype)
+
+    # Expert-chunked dispatch (§Perf iteration moe-3): process eb = E/chunks
+    # experts at a time so the dispatched activation buffer is
+    # (G, eb, C, D) instead of (G, E, C, D) — bounds kimi-k2's per-layer
+    # dispatch memory at the cost of `chunks` sequential block matmuls.
+    assert e % expert_chunks == 0, (e, expert_chunks)
+    eb = e // expert_chunks
+
+    def one_block(carry, b):
+        out_acc = carry
+        slots_blk = jax.lax.dynamic_slice_in_dim(
+            token_for_slot, b * eb * c, eb * c, axis=1)    # (G, eb*C)
+        xg = jax.vmap(lambda xp, tfs: xp[tfs])(x_pad, slots_blk)
+        xg = xg.reshape(g, eb, c, d)
+        # all-to-all #1: group-sharded -> expert-sharded
+        xg = shd.constraint(xg, None, "expert", None, None)
+        wg = jax.lax.dynamic_slice_in_dim(p["w_gate"], b * eb, eb, 0)
+        wu = jax.lax.dynamic_slice_in_dim(p["w_up"], b * eb, eb, 0)
+        wd = jax.lax.dynamic_slice_in_dim(p["w_down"], b * eb, eb, 0)
+        h = jnp.einsum("gecd,edf->gecf", xg, wg.astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        u = jnp.einsum("gecd,edf->gecf", xg, wu.astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u,
+                       wd.astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        # all-to-all #2: expert-sharded -> group-sharded
+        y = shd.constraint(y, "tokens", None, None, None)
+        y_flat = y.reshape(g, eb * c, d)
+
+        # combine this block's slots back into tokens
+        in_blk = (se >= b * eb) & (se < (b + 1) * eb)
+        tgt_local = jnp.clip(target - b * eb * c, 0, eb * c - 1)
+        slot_out = jax.vmap(lambda yf, tgt: yf[tgt])(y_flat, tgt_local)
+        w_blk = jnp.where(in_blk & keep, gate_sorted, 0.0).astype(x.dtype)
+
+        def combine(so, st_, gs):
+            return jnp.zeros((tg, d), x.dtype).at[st_].add(gs[:, None] * so)
+        out_acc = out_acc + jax.vmap(combine)(slot_out, st, w_blk)
+        return out_acc, None
+
+    out0 = jnp.zeros((g, tg, d), x.dtype)
+    if expert_chunks == 1:
+        out, _ = one_block(out0, 0)
+    else:
+        out, _ = jax.lax.scan(jax.checkpoint(one_block), out0,
+                              jnp.arange(expert_chunks))
+    out = shd.constraint(out, "tokens", None, None).reshape(t, d)
+
+    if "shared" in p:
+        out = out + ffn_apply(p["shared"], x)
+
+    # Switch-style load-balance aux loss (global over all groups).
+    me = jnp.mean(probs, axis=(0, 1))                      # (E,)
+    dispatch_frac = jax.vmap(lambda k_, se_: jax.ops.segment_sum(
+        jnp.where(k_, 1.0, 0.0), se_, num_segments=e))(keep, se)
+    dispatch_frac = jnp.sum(dispatch_frac, axis=0) / (t * top_k)
+    aux = e * jnp.sum(me * dispatch_frac)
+    return out, aux

@@ -1,0 +1,468 @@
+"""RecSys models: DLRM (MLPerf), DCN-v2, DIN, DIEN.
+
+Substrate notes (DESIGN.md):
+  * JAX has no nn.EmbeddingBag — `embedding_bag` here is jnp.take +
+    jax.ops.segment_sum (sum/mean modes), the standard JAX formulation;
+  * embedding tables are a list of (rows_i, dim) arrays, row-sharded over
+    the "model" mesh axis ("table_rows" rule); dense MLPs replicate;
+  * the paper transfer: `quantize_tables` compresses every table to 1-byte
+    K-Means codes + a shared per-table codebook (HPC-ColPali §III-B applied
+    to embedding storage — 32x/57x arithmetic identical), with
+    decode-on-lookup. DIN's target-attention weights additionally drive the
+    paper's top-p% *history pruning* (`din_prune_p`), a direct analogue of
+    attention-guided patch pruning;
+  * `score_candidates` is the retrieval_cand shape: one user against 10^6
+    candidates as one batched einsum (no loop), candidates flat-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pruning as core_pruning
+from repro.core import quantization as quant
+from repro.dist.sharding import NULL
+from repro.models import layers as L
+from repro.optim import optimizer as opt
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Embedding substrate
+# ---------------------------------------------------------------------------
+
+def embedding_bag(table: Array, values: Array, segment_ids: Array,
+                  num_segments: int, mode: str = "sum") -> Array:
+    """EmbeddingBag: gather rows for `values` (flat multi-hot ids) and
+    segment-reduce into `num_segments` bags. mode: sum | mean."""
+    rows = jnp.take(table, values, axis=0)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(values, out.dtype),
+                                  segment_ids, num_segments=num_segments)
+        out = out / jnp.maximum(cnt[:, None], 1.0)
+    return out
+
+
+def _tables_init(key, rows_list: Sequence[int], dim: int, dtype):
+    ks = jax.random.split(key, len(rows_list))
+    return [(jax.random.normal(ks[i], (r, dim)) / jnp.sqrt(dim)).astype(dtype)
+            for i, r in enumerate(rows_list)]
+
+
+def _tables_specs(rows_list):
+    return [("table_rows", None) for _ in rows_list]
+
+
+def lookup(tables: List[Array], ids: Array) -> Array:
+    """Single-hot lookup: ids (B, n_fields) -> (B, n_fields, dim)."""
+    cols = [jnp.take(t, ids[:, i], axis=0) for i, t in enumerate(tables)]
+    return jnp.stack(cols, axis=1)
+
+
+# --- paper transfer: K-Means-quantized tables ------------------------------
+
+def quantize_tables(key: Array, tables: List[Array], k: int = 256,
+                    iters: int = 10) -> Dict[str, Any]:
+    """Compress each table to (codes uint8, codebook (K, dim))."""
+    out = {"codes": [], "codebooks": []}
+    for i, t in enumerate(tables):
+        kk = jax.random.fold_in(key, i)
+        cb, _ = quant.kmeans_fit(
+            kk, t, quant.KMeansConfig(k=min(k, t.shape[0]), iters=iters))
+        out["codes"].append(quant.quantize(t, cb))
+        out["codebooks"].append(cb)
+    return out
+
+
+def quantized_lookup(qtables: Dict[str, Any], ids: Array) -> Array:
+    """Decode-on-lookup: 1 B/row HBM read + VMEM-resident codebook."""
+    cols = []
+    for i in range(len(qtables["codes"])):
+        code = jnp.take(qtables["codes"][i], ids[:, i], axis=0)
+        cols.append(jnp.take(qtables["codebooks"][i],
+                             code.astype(jnp.int32), axis=0))
+    return jnp.stack(cols, axis=1)
+
+
+def tables_nbytes(tables: List[Array]) -> int:
+    return sum(int(t.size) * t.dtype.itemsize for t in tables)
+
+
+def qtables_nbytes(qt: Dict[str, Any]) -> int:
+    return (sum(int(c.size) for c in qt["codes"])
+            + sum(int(cb.size) * cb.dtype.itemsize for cb in qt["codebooks"]))
+
+
+# ---------------------------------------------------------------------------
+# MLP helpers (shared)
+# ---------------------------------------------------------------------------
+
+def _mlp_init(key, dims, dtype, final_act=False):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": L.dense_init(ks[i], dims[i], dims[i + 1], dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)]
+
+
+def _mlp_specs(n_layers):
+    return [{"w": (None, None), "b": (None,)} for _ in range(n_layers)]
+
+
+def _mlp_apply(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str = "dlrm"
+    family: str = "dlrm"            # dlrm | dcn | din | dien
+    n_dense: int = 13
+    table_rows: Tuple[int, ...] = ()
+    embed_dim: int = 128
+    bot_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    n_cross_layers: int = 0          # dcn-v2
+    # din/dien
+    seq_len: int = 100
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    gru_dim: int = 0                 # dien
+    din_prune_p: float = 0.0         # paper transfer: history pruning (0=off)
+    param_dtype: str = "float32"
+    unroll: bool = False             # cost-analysis mode (launch/dryrun.py)
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.table_rows)
+
+    @property
+    def pdtype(self):
+        return jnp.bfloat16 if self.param_dtype == "bfloat16" else jnp.float32
+
+    def param_count(self) -> int:
+        emb = sum(self.table_rows) * self.embed_dim
+        return emb  # MLPs are negligible at these scales
+
+
+# ---------------------------------------------------------------------------
+# DLRM
+# ---------------------------------------------------------------------------
+
+def dlrm_init(key: Array, cfg: RecsysConfig) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    n_vec = cfg.n_sparse + 1
+    n_inter = n_vec * (n_vec - 1) // 2
+    return {
+        "tables": _tables_init(k1, cfg.table_rows, d, cfg.pdtype),
+        "bot": _mlp_init(k2, (cfg.n_dense,) + cfg.bot_mlp, cfg.pdtype),
+        "top": _mlp_init(k3, (n_inter + d,) + cfg.top_mlp, cfg.pdtype),
+    }
+
+
+def dlrm_specs(cfg: RecsysConfig) -> Dict[str, Any]:
+    return {
+        "tables": _tables_specs(cfg.table_rows),
+        "bot": _mlp_specs(len(cfg.bot_mlp)),
+        "top": _mlp_specs(len(cfg.top_mlp)),
+    }
+
+
+def _dot_interact(vecs: Array) -> Array:
+    """vecs (B, F, d) -> upper-triangle pairwise dots (B, F(F-1)/2)."""
+    b, f, d = vecs.shape
+    g = jnp.einsum("bfd,bgd->bfg", vecs, vecs,
+                   preferred_element_type=jnp.float32)
+    iu, ju = jnp.triu_indices(f, k=1)
+    return g[:, iu, ju]
+
+
+def dlrm_forward(params, dense: Array, sparse_ids: Array,
+                 cfg: RecsysConfig, shd=NULL) -> Array:
+    x = _mlp_apply(params["bot"], dense.astype(cfg.pdtype), final_act=True)
+    emb = lookup(params["tables"], sparse_ids)            # (B, 26, d)
+    emb = shd.constraint(emb, "batch", None, None)
+    vecs = jnp.concatenate([x[:, None, :], emb], axis=1)  # (B, 27, d)
+    inter = _dot_interact(vecs).astype(cfg.pdtype)
+    top_in = jnp.concatenate([x, inter], axis=-1)
+    return _mlp_apply(params["top"], top_in)[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2 (stacked: cross network then deep)
+# ---------------------------------------------------------------------------
+
+def dcn_init(key: Array, cfg: RecsysConfig) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d0 = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    cross = []
+    for i in range(cfg.n_cross_layers):
+        kk = jax.random.fold_in(k2, i)
+        cross.append({"w": L.dense_init(kk, d0, d0, cfg.pdtype),
+                      "b": jnp.zeros((d0,), cfg.pdtype)})
+    return {
+        "tables": _tables_init(k1, cfg.table_rows, cfg.embed_dim, cfg.pdtype),
+        "cross": cross,
+        "deep": _mlp_init(k3, (d0,) + cfg.top_mlp, cfg.pdtype),
+        "out": _mlp_init(k4, (cfg.top_mlp[-1], 1), cfg.pdtype),
+    }
+
+
+def dcn_specs(cfg: RecsysConfig) -> Dict[str, Any]:
+    return {
+        "tables": _tables_specs(cfg.table_rows),
+        "cross": [{"w": (None, None), "b": (None,)}
+                  for _ in range(cfg.n_cross_layers)],
+        "deep": _mlp_specs(len(cfg.top_mlp)),
+        "out": _mlp_specs(1),
+    }
+
+
+def dcn_forward(params, dense: Array, sparse_ids: Array, cfg: RecsysConfig,
+                shd=NULL) -> Array:
+    emb = lookup(params["tables"], sparse_ids)            # (B, F, d)
+    b = emb.shape[0]
+    x0 = jnp.concatenate([emb.reshape(b, -1),
+                          dense.astype(cfg.pdtype)], axis=-1)
+    x0 = shd.constraint(x0, "batch", None)
+    x = x0
+    for cl in params["cross"]:
+        x = x0 * (x @ cl["w"] + cl["b"]) + x              # DCN-v2 full-rank
+    h = _mlp_apply(params["deep"], x, final_act=True)
+    return _mlp_apply(params["out"], h)[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# DIN (target attention over user history)
+# ---------------------------------------------------------------------------
+
+def din_init(key: Array, cfg: RecsysConfig) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "tables": _tables_init(k1, cfg.table_rows, d, cfg.pdtype),  # [items]
+        "attn": _mlp_init(k2, (4 * d,) + cfg.attn_mlp + (1,), cfg.pdtype),
+        "mlp": _mlp_init(k3, (3 * d,) + cfg.top_mlp + (1,), cfg.pdtype),
+    }
+
+
+def din_specs(cfg: RecsysConfig) -> Dict[str, Any]:
+    return {
+        "tables": _tables_specs(cfg.table_rows),
+        "attn": _mlp_specs(len(cfg.attn_mlp) + 1),
+        "mlp": _mlp_specs(len(cfg.top_mlp) + 1),
+    }
+
+
+def din_attention(params, hist_e: Array, target_e: Array, hist_mask: Array,
+                  cfg: RecsysConfig) -> Tuple[Array, Array]:
+    """Target attention. hist_e (B, S, d), target_e (B, d) ->
+    (user_vec (B, d), attn_weights (B, S))."""
+    s = hist_e.shape[1]
+    t = jnp.broadcast_to(target_e[:, None, :], hist_e.shape)
+    feat = jnp.concatenate([hist_e, t, hist_e - t, hist_e * t], axis=-1)
+    logits = _mlp_apply(params["attn"], feat)[..., 0]     # (B, S)
+    logits = jnp.where(hist_mask, logits, -1e30)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w = jnp.where(hist_mask, w, 0.0)
+
+    if cfg.din_prune_p > 0:
+        # Paper transfer: attention-guided pruning of the behaviour history
+        # — keep only the top-p% most attended items (HPC-ColPali §III-C).
+        pr = core_pruning.prune_topp(hist_e, w, hist_mask, p=cfg.din_prune_p)
+        w_kept = jnp.take_along_axis(w, pr.indices, axis=-1) * pr.mask
+        w_kept = w_kept / jnp.maximum(jnp.sum(w_kept, -1, keepdims=True), 1e-9)
+        user = jnp.einsum("bs,bsd->bd", w_kept.astype(hist_e.dtype),
+                          pr.embeddings)
+    else:
+        user = jnp.einsum("bs,bsd->bd", w.astype(hist_e.dtype), hist_e)
+    return user, w
+
+
+def din_forward(params, hist_ids: Array, hist_mask: Array, target_ids: Array,
+                cfg: RecsysConfig, shd=NULL) -> Array:
+    """hist_ids (B, S), target_ids (B,) -> logits (B,)."""
+    table = params["tables"][0]
+    hist_e = jnp.take(table, hist_ids, axis=0)            # (B, S, d)
+    target_e = jnp.take(table, target_ids, axis=0)        # (B, d)
+    hist_e = shd.constraint(hist_e, "batch", None, None)
+    user, _ = din_attention(params, hist_e, target_e, hist_mask, cfg)
+    feat = jnp.concatenate([user, target_e, user * target_e], axis=-1)
+    return _mlp_apply(params["mlp"], feat)[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# DIEN (GRU interest extraction + AUGRU interest evolution)
+# ---------------------------------------------------------------------------
+
+def _gru_init(key, d_in, d_h, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"wx": L.dense_init(k1, d_in, 3 * d_h, dtype),
+            "wh": L.dense_init(k2, d_h, 3 * d_h, dtype),
+            "b": jnp.zeros((3 * d_h,), dtype)}
+
+
+def _gru_cell(p, h, x, att: Optional[Array] = None):
+    """GRU cell; att (B, 1) gates the update gate (AUGRU)."""
+    gates = x @ p["wx"] + h @ p["wh"] + p["b"]
+    r, z, _ = jnp.split(gates, 3, axis=-1)
+    r, z = jax.nn.sigmoid(r), jax.nn.sigmoid(z)
+    # n = tanh(Wn x + r * (Un h) + bn)
+    dh = z.shape[-1]
+    wx_n, wh_n, b_n = p["wx"][:, 2 * dh:], p["wh"][:, 2 * dh:], p["b"][2 * dh:]
+    n = jnp.tanh(x @ wx_n + r * (h @ wh_n) + b_n)
+    if att is not None:
+        z = z * att                                      # AUGRU
+    return (1 - z) * h + z * n
+
+
+def dien_init(key: Array, cfg: RecsysConfig) -> Dict[str, Any]:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d, g = cfg.embed_dim, cfg.gru_dim
+    return {
+        "tables": _tables_init(k1, cfg.table_rows, d, cfg.pdtype),
+        "gru1": _gru_init(k2, d, g, cfg.pdtype),
+        "augru": _gru_init(k3, g, g, cfg.pdtype),
+        "attn": _mlp_init(k4, (g + d,) + cfg.attn_mlp + (1,), cfg.pdtype),
+        "mlp": _mlp_init(k5, (g + 2 * d,) + cfg.top_mlp + (1,), cfg.pdtype),
+    }
+
+
+def dien_specs(cfg: RecsysConfig) -> Dict[str, Any]:
+    gru = {"wx": (None, None), "wh": (None, None), "b": (None,)}
+    return {
+        "tables": _tables_specs(cfg.table_rows),
+        "gru1": dict(gru), "augru": dict(gru),
+        "attn": _mlp_specs(len(cfg.attn_mlp) + 1),
+        "mlp": _mlp_specs(len(cfg.top_mlp) + 1),
+    }
+
+
+def dien_forward(params, hist_ids: Array, hist_mask: Array,
+                 target_ids: Array, cfg: RecsysConfig, shd=NULL) -> Array:
+    table = params["tables"][0]
+    hist_e = jnp.take(table, hist_ids, axis=0)            # (B, S, d)
+    target_e = jnp.take(table, target_ids, axis=0)        # (B, d)
+    b, s, d = hist_e.shape
+    g = cfg.gru_dim
+    maskf = hist_mask.astype(hist_e.dtype)
+
+    # Interest extraction GRU over the history.
+    def step1(h, xs):
+        x, m = xs
+        h_new = _gru_cell(params["gru1"], h, x)
+        h = jnp.where(m[:, None] > 0, h_new, h)
+        return h, h
+    h0 = jnp.zeros((b, g), hist_e.dtype)
+    _, states = jax.lax.scan(step1, h0,
+                             (hist_e.transpose(1, 0, 2), maskf.T),
+                             unroll=s if cfg.unroll else 1)
+    states = states.transpose(1, 0, 2)                    # (B, S, g)
+
+    # Attention of target on interest states.
+    t = jnp.broadcast_to(target_e[:, None, :], (b, s, d))
+    alog = _mlp_apply(params["attn"],
+                      jnp.concatenate([states, t], -1))[..., 0]
+    alog = jnp.where(hist_mask, alog, -1e30)
+    att = jax.nn.softmax(alog.astype(jnp.float32), -1).astype(hist_e.dtype)
+
+    # AUGRU interest evolution.
+    def step2(h, xs):
+        x, a, m = xs
+        h_new = _gru_cell(params["augru"], h, x, att=a[:, None])
+        h = jnp.where(m[:, None] > 0, h_new, h)
+        return h, None
+    hT, _ = jax.lax.scan(step2, jnp.zeros((b, g), hist_e.dtype),
+                         (states.transpose(1, 0, 2), att.T, maskf.T),
+                         unroll=s if cfg.unroll else 1)
+
+    hist_mean = jnp.mean(hist_e * maskf[..., None], axis=1)
+    feat = jnp.concatenate([hT, target_e, hist_mean], axis=-1)
+    return _mlp_apply(params["mlp"], feat)[:, 0].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Unified API
+# ---------------------------------------------------------------------------
+
+def init(key: Array, cfg: RecsysConfig) -> Dict[str, Any]:
+    return {"dlrm": dlrm_init, "dcn": dcn_init,
+            "din": din_init, "dien": dien_init}[cfg.family](key, cfg)
+
+
+def param_specs(cfg: RecsysConfig) -> Dict[str, Any]:
+    return {"dlrm": dlrm_specs, "dcn": dcn_specs,
+            "din": din_specs, "dien": dien_specs}[cfg.family](cfg)
+
+
+def forward(params, batch: Dict[str, Array], cfg: RecsysConfig, shd=NULL
+            ) -> Array:
+    if cfg.family == "dlrm":
+        return dlrm_forward(params, batch["dense"], batch["sparse_ids"],
+                            cfg, shd)
+    if cfg.family == "dcn":
+        return dcn_forward(params, batch["dense"], batch["sparse_ids"],
+                           cfg, shd)
+    if cfg.family == "din":
+        return din_forward(params, batch["hist_ids"], batch["hist_mask"],
+                           batch["target_ids"], cfg, shd)
+    return dien_forward(params, batch["hist_ids"], batch["hist_mask"],
+                        batch["target_ids"], cfg, shd)
+
+
+def loss_fn(params, batch, cfg: RecsysConfig, shd=NULL):
+    logits = forward(params, batch, cfg, shd)
+    y = batch["label"].astype(jnp.float32)
+    # numerically stable BCE-with-logits
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    acc = jnp.mean((logits > 0) == (y > 0.5))
+    return loss, {"acc": acc}
+
+
+def train_step(params, opt_state, batch, cfg: RecsysConfig,
+               opt_cfg: opt.AdamWConfig, shd=NULL):
+    (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch, cfg, shd)
+    params, opt_state, om = opt.update(opt_cfg, grads, opt_state, params)
+    return params, opt_state, {"loss": loss, **parts, **om}
+
+
+def serve_step(params, batch, cfg: RecsysConfig, shd=NULL) -> Array:
+    return jax.nn.sigmoid(forward(params, batch, cfg, shd))
+
+
+def score_candidates(params, batch: Dict[str, Array], candidate_ids: Array,
+                     cfg: RecsysConfig, shd=NULL) -> Array:
+    """retrieval_cand shape: 1 user vs N candidates, one batched pass.
+
+    Candidates are flat-sharded over the mesh ("candidate" rule); the user
+    features broadcast. Implemented by tiling the user batch against the
+    candidate axis and reusing `forward` (XLA fuses the broadcast).
+    """
+    n = candidate_ids.shape[0]
+    if cfg.family in ("din", "dien"):
+        hist_ids = jnp.broadcast_to(batch["hist_ids"], (n, cfg.seq_len))
+        hist_mask = jnp.broadcast_to(batch["hist_mask"], (n, cfg.seq_len))
+        cb = {"hist_ids": hist_ids, "hist_mask": hist_mask,
+              "target_ids": candidate_ids}
+    else:
+        dense = jnp.broadcast_to(batch["dense"], (n, cfg.n_dense))
+        sparse = jnp.broadcast_to(batch["sparse_ids"], (n, cfg.n_sparse))
+        # candidate id replaces the last sparse field (item id slot)
+        sparse = sparse.at[:, -1].set(candidate_ids)
+        cb = {"dense": dense, "sparse_ids": sparse}
+    scores = forward(params, cb, cfg, shd)
+    return scores

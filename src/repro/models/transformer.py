@@ -1,0 +1,411 @@
+"""Decoder-only LM (dense + MoE, GQA, RoPE, chunked-local attention).
+
+Covers the five assigned LM architectures (glm4-9b, qwen2-1.5b,
+llama3.2-3b, llama4-scout-17b-a16e, kimi-k2-1t-a32b) and serves as the
+ColPali encoder backbone (models/colpali.py).
+
+Implementation notes (DESIGN.md §4, §6):
+  * layers are stacked on a leading dim and iterated with lax.scan +
+    jax.checkpoint — one traced block, O(1) compile in depth, remat saves
+    only the (sequence-parallel-sharded) residual carry;
+  * the residual stream is sharding-constrained to
+    ("batch", "seq_sp", None) between blocks (Megatron-SP style); the
+    divisibility fallback turns this off automatically for decode (S=1);
+  * cross-entropy runs in sequence chunks (lax.map) so the (tokens, vocab)
+    logits never fully materialise;
+  * prefill returns stacked KV caches; decode_step updates them in place
+    (donated) at a traced position — chunked-local layers touch only a
+    static window of the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import NULL
+from repro.models import layers as L
+from repro.optim import optimizer as opt
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 512
+    vocab: int = 1024
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    qkv_bias: bool = False            # qwen2-style QKV bias
+    tie_embeddings: bool = True
+    rope_theta: float = 500_000.0
+    norm_eps: float = 1e-5
+    # MoE (n_experts == 0 -> dense)
+    n_experts: int = 0
+    moe_top_k: int = 1
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    moe_expert_chunks: int = 1        # sequential expert blocks (memory)
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # attention structure
+    attn_chunk: int = 0               # >0: chunked-local (iRoPE) layers
+    global_every: int = 4             # every Nth layer stays full attention
+    q_chunk: int = 512                # flash-style query block
+    loss_chunk: int = 2048            # CE sequence chunk
+    # dtypes
+    param_dtype: str = "float32"
+    activation_dtype: str = "float32"
+    # cost-analysis mode: fully unroll scans so HLO flop counts are exact
+    # (XLA cost analysis visits while bodies once) — launch/dryrun.py
+    unroll: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def pdtype(self):
+        return jnp.bfloat16 if self.param_dtype == "bfloat16" else jnp.float32
+
+    @property
+    def adtype(self):
+        return (jnp.bfloat16 if self.activation_dtype == "bfloat16"
+                else jnp.float32)
+
+    def layer_is_chunked(self) -> Array:
+        """(L,) bool — which layers use chunked-local attention."""
+        i = jnp.arange(self.n_layers)
+        if self.attn_chunk <= 0:
+            return jnp.zeros((self.n_layers,), bool)
+        return (i % self.global_every) != (self.global_every - 1)
+
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.hd
+        attn = self.n_layers * (d * (self.n_heads + 2 * self.n_kv_heads) * hd
+                                + self.n_heads * hd * d)
+        if self.is_moe:
+            ff = self.n_layers * (
+                self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts
+                + (3 * d * self.moe_d_ff * self.n_shared_experts))
+        else:
+            ff = self.n_layers * 3 * d * self.d_ff
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return attn + ff + emb + self.n_layers * 2 * d + d
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k + shared experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        full = self.param_count()
+        all_experts = self.n_layers * self.n_experts * 3 * d * self.moe_d_ff
+        active = self.n_layers * self.moe_top_k * 3 * d * self.moe_d_ff
+        return full - all_experts + active
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+def _layer_init(key: Array, cfg: LMConfig) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.pdtype),
+        "ln2": jnp.ones((cfg.d_model,), cfg.pdtype),
+        "attn": L.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.hd, cfg.qkv_bias, cfg.pdtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = L.moe_init(k2, cfg.d_model, cfg.moe_d_ff, cfg.n_experts,
+                              cfg.n_shared_experts, cfg.pdtype)
+    else:
+        p["ffn"] = L.ffn_init(k2, cfg.d_model, cfg.d_ff, cfg.pdtype)
+    return p
+
+
+def init(key: Array, cfg: LMConfig) -> Dict[str, Any]:
+    k_emb, k_out, k_layers = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    blocks = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    p = {
+        "embed": L.embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.pdtype),
+        "blocks": blocks,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.dense_init(k_out, cfg.d_model, cfg.vocab, cfg.pdtype)
+    return p
+
+
+def _stack(spec_tree):
+    """Prepend the stacked-layer dim (None) to every spec tuple."""
+    return jax.tree.map(lambda s: (None,) + tuple(s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, tuple))
+
+
+def param_specs(cfg: LMConfig) -> Dict[str, Any]:
+    block = {
+        "ln1": ("embed",),
+        "ln2": ("embed",),
+        "attn": L.attn_specs(cfg.qkv_bias),
+    }
+    if cfg.is_moe:
+        block["moe"] = L.moe_specs(cfg.n_shared_experts)
+    else:
+        block["ffn"] = L.ffn_specs()
+    s = {
+        "embed": ("vocab", "embed"),
+        "blocks": _stack(block),
+        "ln_f": ("embed",),
+    }
+    if not cfg.tie_embeddings:
+        s["unembed"] = ("embed", "vocab")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _block_apply(bp: Dict[str, Any], x: Array, positions: Array,
+                 is_chunked: Array, cfg: LMConfig, shd,
+                 want_salience: bool) -> Tuple[Array, Array, Optional[Array]]:
+    """One transformer block. Returns (x, aux_loss, salience)."""
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+
+    def run_attn(chunk):
+        return L.attention(bp["attn"], h, positions,
+                           n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                           head_dim=cfg.hd, theta=cfg.rope_theta,
+                           chunk=chunk, q_chunk=cfg.q_chunk, shd=shd,
+                           want_salience=want_salience, unroll=cfg.unroll)
+
+    s = x.shape[1]
+    if cfg.attn_chunk > 0 and cfg.attn_chunk < s:
+        attn_out, sal = jax.lax.cond(
+            is_chunked,
+            lambda: run_attn(cfg.attn_chunk),
+            lambda: run_attn(0))
+    else:
+        attn_out, sal = run_attn(0)
+    x = x + attn_out
+    x = shd.constraint(x, "batch", "seq_sp", None)
+
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        b, sq, d = h.shape
+        ff, aux = L.moe_apply(bp["moe"], h.reshape(b * sq, d),
+                              top_k=cfg.moe_top_k,
+                              capacity_factor=cfg.capacity_factor, shd=shd,
+                              expert_chunks=cfg.moe_expert_chunks)
+        ff = ff.reshape(b, sq, d)
+    else:
+        ff, aux = L.ffn_apply(bp["ffn"], h), jnp.float32(0.0)
+    x = x + ff
+    x = shd.constraint(x, "batch", "seq_sp", None)
+    return x, aux, sal
+
+
+def forward(params: Dict[str, Any], tokens: Array, cfg: LMConfig,
+            shd=NULL, *, want_salience: bool = False
+            ) -> Tuple[Array, Array, Optional[Array]]:
+    """tokens (B, S) -> (hidden (B, S, D), aux_loss (), salience (B, S)|None).
+
+    Salience (attention mass received per position, final layer) feeds the
+    paper's pruning — models/colpali.py.
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+    x = shd.constraint(x, "batch", "seq_sp", None)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    chunked = cfg.layer_is_chunked()
+    n_l = cfg.n_layers
+
+    def body(carry, xs):
+        x = carry
+        bp, is_chunked, is_last = xs
+        want = want_salience  # only the last layer's salience is kept
+        fn = lambda bp_, x_: _block_apply(bp_, x_, positions, is_chunked,
+                                          cfg, shd, want)
+        x, aux, sal = jax.checkpoint(fn)(bp, x)
+        if sal is None:
+            sal = jnp.zeros((b, s), jnp.float32)
+        sal = jnp.where(is_last, sal, 0.0)
+        return x, (aux, sal)
+
+    is_last = jnp.arange(n_l) == n_l - 1
+    x, (auxes, sals) = jax.lax.scan(body, x, (params["blocks"], chunked,
+                                              is_last),
+                                    unroll=n_l if cfg.unroll else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    aux = jnp.sum(auxes)
+    sal = jnp.sum(sals, axis=0) if want_salience else None
+    return x, aux, sal
+
+
+def logits_fn(params: Dict[str, Any], h: Array, cfg: LMConfig) -> Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def loss_fn(params: Dict[str, Any], tokens: Array, targets: Array,
+            cfg: LMConfig, shd=NULL) -> Tuple[Array, Dict[str, Array]]:
+    """Next-token CE, chunked over the sequence (DESIGN.md §6).
+
+    Positions with target < 0 are masked out (prompt positions in RAG
+    fine-tuning, padding).
+    """
+    h, aux, _ = forward(params, tokens, cfg, shd)
+    # exit sequence parallelism before the loss: the chunk scan slices the
+    # seq dim, and a model-sharded seq dim would otherwise make GSPMD
+    # replicate the (B, ck, V) logits (§Perf iteration loss-1: 86 GiB/dev
+    # of replicated fp32 logits on kimi-k2 -> 0.17 GiB sharded)
+    h = shd.constraint(h, "batch", None, None)
+    b, s, d = h.shape
+    ck = min(cfg.loss_chunk, s)
+    while s % ck != 0:
+        ck //= 2
+    n_chunks = s // ck
+    hc = h.reshape(b, n_chunks, ck, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, n_chunks, ck).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        hcb, tcb = args
+        valid = tcb >= 0
+        safe = jnp.maximum(tcb, 0)
+        logits = logits_fn(params, hcb, cfg)              # (B, ck, V) f32
+        logits = shd.constraint(logits, "batch", None, "vocab")
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        ce = jnp.where(valid, logz - gold, 0.0)
+        return jnp.sum(ce), jnp.sum(valid)
+
+    # checkpoint: without it the scan saves logits-sized residuals per
+    # chunk for bwd, un-doing the whole point of chunking the CE loss.
+    losses, counts = jax.lax.scan(
+        lambda _, args: (None, jax.checkpoint(chunk_loss)(args)), None,
+        (hc, tc), unroll=n_chunks if cfg.unroll else 1)[1]
+    n_valid = jnp.maximum(jnp.sum(counts), 1)
+    ce = jnp.sum(losses) / n_valid
+    total = ce + cfg.aux_loss_weight * aux
+    return total, {"ce": ce, "aux": aux}
+
+
+def train_step(params, opt_state, batch: Dict[str, Array], cfg: LMConfig,
+               opt_cfg: opt.AdamWConfig, shd=NULL):
+    """(params, opt_state, {tokens, targets}) -> (params, opt_state, metrics)."""
+    (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, batch["tokens"], batch["targets"], cfg, shd)
+    params, opt_state, om = opt.update(opt_cfg, grads, opt_state, params)
+    metrics = {"loss": loss, **parts, **om}
+    return params, opt_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with stacked KV caches
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: Array   # (L, B, S_max, n_kv, hd)
+    v: Array
+
+
+def cache_specs() -> "KVCache":
+    return KVCache((None, "batch", "kv_seq", "kv_heads", None),
+                   (None, "batch", "kv_seq", "kv_heads", None))
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> KVCache:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, cfg.adtype), jnp.zeros(shape, cfg.adtype))
+
+
+def prefill(params, tokens: Array, cfg: LMConfig, max_len: int, shd=NULL
+            ) -> Tuple[Array, KVCache]:
+    """Run the prompt, return (last-position logits (B, V), filled caches).
+
+    The cache K/V are the *post-RoPE* keys/values, recomputed layerwise —
+    we re-run the block projections on the final hidden stream; to keep one
+    code path we recompute k/v per layer from the stored residual inputs.
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    chunked = cfg.layer_is_chunked()
+
+    def body(x, xs):
+        bp, is_chunked = xs
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = L._qkv(bp["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.hd)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        # attention itself (recomputes qkv internally; fine for prefill)
+        x, _, _ = _block_apply(bp, x, positions, is_chunked, cfg, shd, False)
+        pad = max_len - s
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, (kc.astype(cfg.adtype), vc.astype(cfg.adtype))
+
+    x, (kc, vc) = jax.lax.scan(body, x, (params["blocks"], chunked),
+                               unroll=cfg.n_layers if cfg.unroll else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_fn(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, KVCache(kc, vc)
+
+
+def decode_step(params, token: Array, cache: KVCache, pos: Array,
+                cfg: LMConfig, shd=NULL) -> Tuple[Array, KVCache]:
+    """One decode step. token (B,) int32; pos () int32 (aligned batch).
+
+    Returns (logits (B, V), updated cache). Cache buffers are donated by
+    the serving loop (launch/serve.py) so the update is in-place on device.
+    """
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(cfg.adtype)
+    chunked = cfg.layer_is_chunked()
+
+    def body(x, xs):
+        bp, kc, vc, is_chunked = xs
+        h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+
+        def run(chunk):
+            return L.attention_decode(
+                bp["attn"], h, pos, kc, vc, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, head_dim=cfg.hd, theta=cfg.rope_theta,
+                chunk=chunk, shd=shd)
+
+        if cfg.attn_chunk > 0 and cfg.attn_chunk < kc.shape[1]:
+            attn_out, kc, vc = jax.lax.cond(
+                is_chunked, lambda: run(cfg.attn_chunk), lambda: run(0))
+        else:
+            attn_out, kc, vc = run(0)
+        x = x + attn_out
+        h2 = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        if cfg.is_moe:
+            ff, _ = L.moe_apply(bp["moe"], h2.reshape(b, -1),
+                                top_k=cfg.moe_top_k,
+                                capacity_factor=2.0, shd=shd)
+            ff = ff.reshape(b, 1, -1)
+        else:
+            ff = L.ffn_apply(bp["ffn"], h2)
+        x = x + ff
+        return x, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v,
+                                         chunked),
+                               unroll=cfg.n_layers if cfg.unroll else 1)
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_fn(params, x, cfg)[:, 0]
+    return logits, KVCache(kc, vc)

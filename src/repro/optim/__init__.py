@@ -1,0 +1,3 @@
+"""Optimizer substrate: AdamW (+ int8 moments), schedules, grad compression."""
+
+from repro.optim import optimizer  # noqa: F401

@@ -1,0 +1,100 @@
+"""Gradient compression for bandwidth-bound data parallelism.
+
+Two composable schemes (DESIGN.md §4 distributed-optimization tricks):
+
+  * int8 stochastic-rounding quantization — 4x less all-reduce traffic;
+    stochastic rounding keeps the estimator unbiased so convergence is
+    preserved in expectation (validated in tests on a quadratic problem);
+  * top-k sparsification with error feedback (Deep Gradient Compression
+    style) — only the k largest-|g| entries per tensor are exchanged; the
+    residual accumulates locally and is re-injected next step, which is the
+    property that makes 100-1000x sparsification trainable.
+
+Both operate on the *gradient pytree before the optimizer*, so they compose
+with AdamW and the int8-moment option independently.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# --- int8 stochastic-rounding codec ----------------------------------------
+
+class QGrad(NamedTuple):
+    q: jax.Array      # int8
+    scale: jax.Array  # f32 per-tensor scale
+
+
+def quantize_grad(key: jax.Array, g: jax.Array) -> QGrad:
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    x = g / scale
+    lo = jnp.floor(x)
+    p_up = x - lo
+    up = jax.random.uniform(key, g.shape) < p_up
+    q = jnp.clip(lo + up.astype(x.dtype), -127, 127).astype(jnp.int8)
+    return QGrad(q, scale.astype(jnp.float32))
+
+
+def dequantize_grad(qg: QGrad) -> jax.Array:
+    return qg.q.astype(jnp.float32) * qg.scale
+
+
+def compress_tree_int8(key: jax.Array, grads: PyTree) -> PyTree:
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = [quantize_grad(k, g) for k, g in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def decompress_tree_int8(qtree: PyTree) -> PyTree:
+    return jax.tree.map(dequantize_grad, qtree,
+                        is_leaf=lambda x: isinstance(x, QGrad))
+
+
+def compressed_bytes_int8(grads: PyTree) -> int:
+    return sum(x.size + 4 for x in jax.tree.leaves(grads))
+
+
+# --- top-k + error feedback -------------------------------------------------
+
+class TopKState(NamedTuple):
+    residual: PyTree   # error-feedback accumulator (same structure as grads)
+
+
+def topk_init(grads_template: PyTree) -> TopKState:
+    return TopKState(jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                  grads_template))
+
+
+def topk_compress(grads: PyTree, state: TopKState, frac: float
+                  ) -> Tuple[PyTree, TopKState, dict]:
+    """Keep the top-`frac` entries (by |g|) of (grad + residual) per tensor.
+
+    Returns (sparse-but-dense-layout grads, new state, stats). The returned
+    grads are dense tensors with zeros at dropped positions — the layout a
+    sparse all-reduce would reconstruct on the other side; traffic
+    accounting uses `nnz`.
+    """
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        k = max(1, int(acc.size * frac))
+        flat = acc.reshape(-1)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        return kept.reshape(g.shape), acc - kept.reshape(g.shape)
+
+    outs = jax.tree.map(one, grads, state.residual)
+    kept = jax.tree.map(lambda o: o[0], outs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda o: o[1], outs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    nnz = sum(max(1, int(g.size * frac)) for g in jax.tree.leaves(grads))
+    total = sum(g.size for g in jax.tree.leaves(grads))
+    return kept, TopKState(resid), {"nnz": nnz, "total": total,
+                                    "ratio": nnz / total}

@@ -1,0 +1,3 @@
+"""Serving substrate: continuous-batching retrieval server."""
+
+from repro.serving import server  # noqa: F401

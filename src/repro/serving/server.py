@@ -1,0 +1,118 @@
+"""Batched retrieval serving with continuous micro-batching.
+
+RetrievalServer fronts the (possibly mesh-sharded) HPC-ColPali index:
+requests land on a queue; a dispatcher thread coalesces up to
+`max_batch` requests (or `max_wait_ms`, whichever first — classic
+continuous batching), pads the query tensors to the compiled batch shape,
+runs the jitted query pipeline once, and fans results back out per-request.
+Latency percentiles (p50/p99) are tracked per request, matching the
+paper's Table IV metric definitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_wait_ms: float = 2.0
+    top_k: int = 10
+
+
+class _Request:
+    __slots__ = ("q_emb", "q_mask", "q_sal", "event", "result", "t_enqueue")
+
+    def __init__(self, q_emb, q_mask, q_sal):
+        self.q_emb, self.q_mask, self.q_sal = q_emb, q_mask, q_sal
+        self.event = threading.Event()
+        self.result = None
+        self.t_enqueue = time.perf_counter()
+
+
+class RetrievalServer:
+    """search_fn(q_emb (B,Mq,D), q_mask, q_sal) -> (scores (B,k), ids)."""
+
+    def __init__(self, search_fn: Callable, cfg: ServeConfig):
+        self.search_fn = search_fn
+        self.cfg = cfg
+        self._q: "queue.Queue[_Request]" = queue.Queue()
+        self._stop = threading.Event()
+        self.latencies_ms: List[float] = []
+        self.batch_sizes: List[int] = []
+        self._thread = threading.Thread(target=self._dispatch, daemon=True)
+        self._thread.start()
+
+    def submit(self, q_emb, q_mask, q_sal) -> _Request:
+        req = _Request(np.asarray(q_emb), np.asarray(q_mask),
+                       np.asarray(q_sal))
+        self._q.put(req)
+        return req
+
+    def query(self, q_emb, q_mask, q_sal, timeout: float = 30.0):
+        req = self.submit(q_emb, q_mask, q_sal)
+        if not req.event.wait(timeout):
+            raise TimeoutError("retrieval request timed out")
+        return req.result
+
+    def _dispatch(self):
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+            batch = [first]
+            deadline = time.perf_counter() + self.cfg.max_wait_ms / 1e3
+            while len(batch) < self.cfg.max_batch:
+                rem = deadline - time.perf_counter()
+                if rem <= 0:
+                    break
+                try:
+                    batch.append(self._q.get(timeout=rem))
+                except queue.Empty:
+                    break
+            self._run(batch)
+
+    def _run(self, batch: List[_Request]):
+        b = self.cfg.max_batch
+        q = np.stack([r.q_emb for r in batch])
+        qm = np.stack([r.q_mask for r in batch])
+        qs = np.stack([r.q_sal for r in batch])
+        if len(batch) < b:                       # pad to the compiled shape
+            pad = b - len(batch)
+            q = np.concatenate([q, np.zeros((pad,) + q.shape[1:], q.dtype)])
+            qm = np.concatenate([qm, np.zeros((pad,) + qm.shape[1:], bool)])
+            qs = np.concatenate([qs, np.zeros((pad,) + qs.shape[1:],
+                                              qs.dtype)])
+        scores, ids = self.search_fn(jnp.asarray(q), jnp.asarray(qm),
+                                     jnp.asarray(qs))
+        scores, ids = np.asarray(scores), np.asarray(ids)
+        now = time.perf_counter()
+        self.batch_sizes.append(len(batch))
+        for i, r in enumerate(batch):
+            r.result = (scores[i], ids[i])
+            self.latencies_ms.append((now - r.t_enqueue) * 1e3)
+            r.event.set()
+
+    def stats(self) -> Dict[str, float]:
+        lat = np.array(self.latencies_ms) if self.latencies_ms else np.zeros(1)
+        return {
+            "n": len(self.latencies_ms),
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "mean_batch": float(np.mean(self.batch_sizes))
+            if self.batch_sizes else 0.0,
+            "qps": (len(self.latencies_ms) / (np.sum(lat) / 1e3 + 1e-9))
+            if self.latencies_ms else 0.0,
+        }
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)

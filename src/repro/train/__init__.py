@@ -1,0 +1,3 @@
+"""Training substrate: fault-tolerant loop, GPipe PP, elastic re-shard."""
+
+from repro.train import elastic, loop  # noqa: F401

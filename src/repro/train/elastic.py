@@ -1,0 +1,52 @@
+"""Elastic scaling: resume a run on a different device count / mesh.
+
+Checkpoints store unsharded leaves (ckpt/checkpoint.py), so elasticity is:
+build the new mesh, re-resolve every logical spec against it (the
+divisibility fallback absorbs axis-size changes), and restore with the new
+NamedShardings. `reshard_plan` reports which tensors change their layout —
+at production scale this is the prefetch plan for the resharding transfer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.ckpt import checkpoint as ck
+from repro.dist.sharding import Sharder, is_logical_spec
+
+PyTree = Any
+
+
+def resolve_shardings(sharder: Sharder, spec_tree: PyTree,
+                      template: PyTree) -> PyTree:
+    """Logical specs + template shapes -> NamedShardings on sharder.mesh."""
+    return jax.tree.map(
+        lambda spec, leaf: sharder.named(tuple(spec), leaf.shape),
+        spec_tree, template, is_leaf=is_logical_spec)
+
+
+def restore_elastic(directory: str, template: PyTree, spec_tree: PyTree,
+                    mesh: Mesh, rules: Optional[Dict] = None
+                    ) -> Optional[Tuple[int, PyTree]]:
+    """Restore the latest checkpoint resharded onto `mesh`."""
+    sharder = Sharder(mesh, rules) if rules else Sharder(mesh)
+    shardings = resolve_shardings(sharder, spec_tree, template)
+    mgr = ck.CheckpointManager(directory)
+    return mgr.restore_latest(template, shardings)
+
+
+def reshard_plan(old_sharder: Sharder, new_sharder: Sharder,
+                 spec_tree: PyTree, template: PyTree) -> Dict[str, tuple]:
+    """Which leaves change PartitionSpec between two meshes."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=lambda x: hasattr(x, "shape"))
+    specs = jax.tree_util.tree_leaves(spec_tree, is_leaf=is_logical_spec)
+    changes = {}
+    for (path, leaf), spec in zip(flat, specs):
+        old = old_sharder.resolve(tuple(spec), leaf.shape)
+        new = new_sharder.resolve(tuple(spec), leaf.shape)
+        if old != new:
+            changes[jax.tree_util.keystr(path)] = (old, new)
+    return changes

@@ -1,0 +1,28 @@
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+# Tests run on the single real CPU device; multi-device tests spawn
+# subprocesses with XLA_FLAGS (never set the flag here — see dryrun.py).
+jax.config.update("jax_enable_x64", False)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run `code` in a fresh python with n_devices virtual CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,101 @@
+"""Registry / config-surface tests: the 10 assigned archs x their shapes."""
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ArchSpec
+
+
+ASSIGNED = ["glm4-9b", "qwen2-1.5b", "llama3.2-3b",
+            "llama4-scout-17b-a16e", "kimi-k2-1t-a32b",
+            "pna", "din", "dlrm-mlperf", "dien", "dcn-v2"]
+
+
+def test_all_assigned_archs_registered():
+    for a in ASSIGNED:
+        assert isinstance(registry.get(a), ArchSpec)
+    assert "colpali-hpc" in registry.ARCHS     # the paper's own system
+
+
+def test_cell_counts():
+    all_incl = list(registry.all_cells(include_skipped=True,
+                                       include_colpali=False))
+    assert len(all_incl) == 40                 # 10 archs x 4 shapes
+    runnable = list(registry.all_cells(include_colpali=False))
+    # long_500k skipped for 4 pure full-attention LM archs
+    assert len(runnable) == 36
+    skipped = [c for a, c in all_incl if c.skip]
+    assert len(skipped) == 4
+    assert all(c.name == "long_500k" for c in skipped)
+
+
+def test_llama4_runs_long_context_cell():
+    spec = registry.get("llama4-scout-17b-a16e")
+    long_cell = [c for c in spec.shapes if c.name == "long_500k"][0]
+    assert long_cell.skip is None
+    assert spec.config.attn_chunk == 8192
+
+
+def test_exact_assigned_configs():
+    """Spot-check the exact public numbers from the assignment block."""
+    g = registry.get("glm4-9b").config
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads,
+            g.d_ff, g.vocab) == (40, 4096, 32, 2, 13696, 151552)
+    q = registry.get("qwen2-1.5b").config
+    assert (q.n_layers, q.d_model, q.n_heads, q.n_kv_heads, q.d_ff,
+            q.vocab, q.qkv_bias) == (28, 1536, 12, 2, 8960, 151936, True)
+    l = registry.get("llama3.2-3b").config
+    assert (l.n_layers, l.d_model, l.n_heads, l.n_kv_heads, l.d_ff,
+            l.vocab) == (28, 3072, 24, 8, 8192, 128256)
+    s = registry.get("llama4-scout-17b-a16e").config
+    assert (s.n_layers, s.d_model, s.n_heads, s.n_kv_heads, s.vocab,
+            s.n_experts, s.moe_top_k) == (48, 5120, 40, 8, 202048, 16, 1)
+    k = registry.get("kimi-k2-1t-a32b").config
+    assert (k.n_layers, k.d_model, k.n_heads, k.n_kv_heads, k.vocab,
+            k.n_experts, k.moe_top_k, k.moe_d_ff) == (
+        61, 7168, 64, 8, 163840, 384, 8, 2048)
+    p = registry.get("pna").config
+    assert (p.n_layers, p.d_hidden) == (4, 75)
+    d = registry.get("dlrm-mlperf").config
+    assert (d.n_dense, d.n_sparse, d.embed_dim) == (13, 26, 128)
+    assert d.bot_mlp == (512, 256, 128)
+    assert d.top_mlp == (1024, 1024, 512, 256, 1)
+    c = registry.get("dcn-v2").config
+    assert (c.n_cross_layers, c.embed_dim, c.n_sparse) == (3, 16, 26)
+    di = registry.get("din").config
+    assert (di.embed_dim, di.seq_len, di.attn_mlp, di.top_mlp) == (
+        18, 100, (80, 40), (200, 80))
+    de = registry.get("dien").config
+    assert (de.gru_dim, de.embed_dim) == (108, 18)
+
+
+def test_recsys_tables_shard_cleanly():
+    """Padded rows divide the 16-way model axis (DESIGN.md §6)."""
+    for a in ("dlrm-mlperf", "dcn-v2", "din", "dien"):
+        for r in registry.get(a).config.table_rows:
+            assert r % 512 == 0
+
+
+def test_gnn_edges_padded_for_sharding():
+    for cell in registry.get("pna").shapes:
+        assert cell.dims["n_edges"] % 4096 == 0
+
+
+def test_lm_shape_dims_match_assignment():
+    for a in ("glm4-9b", "qwen2-1.5b", "llama3.2-3b",
+              "llama4-scout-17b-a16e", "kimi-k2-1t-a32b"):
+        shapes = {c.name: c.dims for c in registry.get(a).shapes}
+        assert shapes["train_4k"] == {"seq_len": 4096, "global_batch": 256}
+        assert shapes["prefill_32k"] == {"seq_len": 32768,
+                                         "global_batch": 32}
+        assert shapes["decode_32k"] == {"seq_len": 32768,
+                                        "global_batch": 128}
+        assert shapes["long_500k"] == {"seq_len": 524288, "global_batch": 1}
+
+
+def test_recsys_shape_dims_match_assignment():
+    for a in ("din", "dlrm-mlperf", "dien", "dcn-v2"):
+        shapes = {c.name: c.dims for c in registry.get(a).shapes}
+        assert shapes["train_batch"]["batch"] == 65536
+        assert shapes["serve_p99"]["batch"] == 512
+        assert shapes["serve_bulk"]["batch"] == 262144
+        assert shapes["retrieval_cand"]["n_candidates"] == 1_000_000

@@ -1,0 +1,214 @@
+"""Multi-device distribution tests (subprocess with virtual CPU devices —
+the main process keeps its single real device, per the assignment)."""
+import pytest
+
+from tests.conftest import run_subprocess
+
+
+@pytest.mark.slow
+def test_sharded_search_matches_unsharded():
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core import distributed as D, late_interaction as li, quantization as quant
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+key = jax.random.PRNGKey(0)
+ks = jax.random.split(key, 4)
+N, Md, Mq, B, dim, K = 64, 6, 4, 3, 16, 16
+docs = jax.random.normal(ks[0], (N, Md, dim))
+cb, _ = quant.kmeans_fit(ks[1], docs.reshape(-1, dim), quant.KMeansConfig(k=K, iters=5))
+codes = quant.quantize(docs, cb).astype(jnp.int32)
+mask = jnp.ones((N, Md), jnp.float32)
+ids = jnp.arange(N, dtype=jnp.int32)
+q = jax.random.normal(ks[2], (B, Mq, dim))
+qm = jnp.ones((B, Mq), jnp.float32)
+
+search = D.sharded_search_fn(mesh, ("data", "model"), k=8)
+s_sh, i_sh = search(q, qm, codes, mask, ids, cb)
+
+ref = li.quantized_maxsim(q, qm, codes, mask, cb)
+top_s, top_i = jax.lax.top_k(ref, 8)
+np.testing.assert_allclose(np.asarray(s_sh), np.asarray(top_s), atol=1e-4)
+# ids may differ on exact ties (duplicate-code docs); every returned id's
+# true score must equal the reported score.
+true = np.take_along_axis(np.asarray(ref), np.asarray(i_sh), axis=1)
+np.testing.assert_allclose(true, np.asarray(s_sh), atol=1e-4)
+print("SHARDED_SEARCH_OK")
+""")
+    assert "SHARDED_SEARCH_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_kmeans_matches_local():
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import distributed as D, quantization as quant
+
+mesh = jax.make_mesh((8,), ("data",))
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(key, (512, 8))
+c0 = x[:16]
+fit = D.sharded_kmeans_fn(mesh, ("data",), k=16, iters=10)
+c_sh = fit(x, c0)
+
+def local_fit(x, c):
+    for _ in range(10):
+        c, _ = quant._lloyd_step(x, c)
+    return c
+# local Lloyd without the mse recompute ordering: use same step fn
+c_ref = c0
+for _ in range(10):
+    codes = quant.assign(x, c_ref)
+    sums = jax.ops.segment_sum(x, codes, num_segments=16)
+    cnts = jax.ops.segment_sum(jnp.ones(512), codes, num_segments=16)
+    c_ref = jnp.where(cnts[:, None] > 0, sums / jnp.maximum(cnts[:, None], 1.0), c_ref)
+np.testing.assert_allclose(np.asarray(c_sh), np.asarray(c_ref), atol=1e-4)
+print("SHARDED_KMEANS_OK")
+""")
+    assert "SHARDED_KMEANS_OK" in out
+
+
+@pytest.mark.slow
+def test_ring_allgather_matmul():
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.dist.collectives import ring_allgather_matmul
+
+mesh = jax.make_mesh((4,), ("model",))
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(key, (16, 8))
+w = jax.random.normal(jax.random.PRNGKey(1), (8, 12))
+f = ring_allgather_matmul(mesh, "model")
+y = f(x, w)
+np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), atol=1e-4)
+print("RING_OK")
+""")
+    assert "RING_OK" in out
+
+
+@pytest.mark.slow
+def test_pipeline_parallel_matches_sequential():
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.train.loop import make_pipelined_fn
+
+mesh = jax.make_mesh((4,), ("pipe",))
+key = jax.random.PRNGKey(0)
+n_stages, mb, n_micro, d = 4, 4, 8, 16
+ws = jax.random.normal(key, (n_stages, d, d)) / jnp.sqrt(d)
+
+def stage_fn(sp, x):
+    return jnp.tanh(x @ sp["w"])
+
+x = jax.random.normal(jax.random.PRNGKey(1), (n_micro * mb, d))
+piped = make_pipelined_fn(mesh, stage_fn, n_microbatches=n_micro)
+y = piped({"w": ws}, x)
+
+ref = x
+for i in range(n_stages):
+    ref = jnp.tanh(ref @ ws[i])
+np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+print("PIPE_OK")
+""")
+    assert "PIPE_OK" in out
+
+
+@pytest.mark.slow
+def test_elastic_restore_across_meshes(tmp_path):
+    out = run_subprocess(f"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.ckpt import checkpoint as ck
+from repro.train import elastic
+from repro.dist.sharding import Sharder
+
+tree = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+specs = {{"w": ("batch", "mlp")}}
+ck.save("{tmp_path}", 3, tree)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+got = elastic.restore_elastic("{tmp_path}", jax.tree.map(jnp.zeros_like, tree), specs, mesh)
+step, restored = got
+assert step == 3
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+shard_shape = restored["w"].sharding.shard_shape(restored["w"].shape)
+assert shard_shape == (4, 2), shard_shape
+print("ELASTIC_OK")
+""")
+    assert "ELASTIC_OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_cells_compile_on_small_mesh():
+    """The dry-run machinery itself (build_cell + lower + compile) on a
+    small virtual mesh with smoke configs — one cell per family."""
+    out = run_subprocess("""
+import jax
+from jax.sharding import Mesh
+from repro.configs import registry
+from repro.launch import cells as cm
+import numpy as np
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+for arch, shape in [("qwen2-1.5b", "train_4k"), ("llama4-scout-17b-a16e", "decode_32k"),
+                    ("pna", "molecule"), ("dlrm-mlperf", "serve_p99"),
+                    ("dien", "retrieval_cand"), ("colpali-hpc", "serve_query")]:
+    spec = registry.get(arch)
+    cell = [c for c in spec.shapes if c.name == shape][0]
+    with mesh:
+        built = cm.build_cell(spec, cell, mesh, smoke=True)
+        if built.in_shardings is None:
+            jitted = built.fn
+        else:
+            jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                             out_shardings=built.out_shardings,
+                             donate_argnums=built.donate_argnums)
+        compiled = jitted.lower(*built.args).compile()
+        assert compiled.memory_analysis() is not None
+    print("OK", arch, shape)
+print("DRYRUN_SMOKE_OK")
+""", n_devices=8, timeout=900)
+    assert "DRYRUN_SMOKE_OK" in out
+
+
+@pytest.mark.slow
+def test_grouped_moe_ep_matches_unsharded():
+    """moe-2 (EXPERIMENTS.md §Perf): the grouped expert-parallel dispatch
+    must be numerically exact under a real sharded mesh (g=4) vs the
+    unsharded reference (g=1), in the no-drop capacity regime."""
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.models import layers as L
+from repro.dist.sharding import Sharder, NULL
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+sharder = Sharder(mesh)
+key = jax.random.PRNGKey(0)
+T, D, E, K, F = 64, 16, 8, 2, 24
+p = L.moe_init(key, D, F, E, 0, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (T, D))
+
+ref, aux_ref = L.moe_apply(p, x, top_k=K, capacity_factor=16.0, shd=NULL)
+
+with mesh:
+    f = jax.jit(lambda pp, xx: L.moe_apply(pp, xx, top_k=K,
+                                           capacity_factor=16.0,
+                                           shd=sharder),
+                in_shardings=(None, NamedSharding(mesh, P("data", None))))
+    got, aux = f(p, x)
+np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5,
+                           rtol=2e-5)
+np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-5)
+# gradients agree too (the a2a constraints must be transparent to AD)
+g_ref = jax.grad(lambda pp: jnp.sum(L.moe_apply(pp, x, top_k=K,
+                 capacity_factor=16.0, shd=NULL)[0] ** 2))(p)
+with mesh:
+    g_sh = jax.jit(jax.grad(lambda pp: jnp.sum(L.moe_apply(pp, x, top_k=K,
+                   capacity_factor=16.0, shd=sharder)[0] ** 2)))(p)
+for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_sh)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5,
+                               rtol=5e-5)
+print("GROUPED_MOE_EP_OK")
+""")
+    assert "GROUPED_MOE_EP_OK" in out

@@ -1,0 +1,123 @@
+"""Index + end-to-end pipeline tests (core/index.py, core/pipeline.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import index as idx
+from repro.core import pipeline as pipe
+from repro.data import synthetic
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    key = jax.random.PRNGKey(0)
+    spec = synthetic.CorpusSpec(n_docs=256, n_queries=32, n_patches=16,
+                                n_q_patches=4, dim=32, n_topics=8,
+                                dup_per_doc=3)
+    return synthetic.make_retrieval_corpus(key, spec)
+
+
+def _target_hit_rate(ids, relevance):
+    hits = 0
+    for i in range(ids.shape[0]):
+        rel = np.asarray(relevance[i])
+        hits += int((rel[np.asarray(ids[i])] >= 2).any())
+    return hits / ids.shape[0]
+
+
+@pytest.mark.parametrize("mode,index", [
+    ("float", "flat"), ("quantized", "flat"), ("quantized", "ivf"),
+    ("binary", "flat")])
+def test_pipeline_modes_retrieve_relevant(corpus, mode, index):
+    key = jax.random.PRNGKey(1)
+    cfg = pipe.HPCConfig(k=64, p=60.0, mode=mode, index=index,
+                         prune_side="doc", kmeans_iters=10,
+                         rerank=16 if mode == "quantized" else 0,
+                         ivf=idx.IVFConfig(n_list=16, n_probe=8, iters=8))
+    hpc_index = pipe.build_index(key, corpus.doc_patches, corpus.doc_mask,
+                                 corpus.doc_salience, cfg)
+    scores, ids = pipe.query(hpc_index, corpus.query_patches,
+                             corpus.query_mask, corpus.query_salience,
+                             cfg, k=10)
+    assert ids.shape == (32, 10)
+    hit = _target_hit_rate(ids, corpus.relevance)
+    # planted corpus: relevant docs must surface in top-10
+    floor = {"float": 0.9, "quantized": 0.7, "binary": 0.5}[mode]
+    assert hit >= floor, f"{mode}/{index}: hit@10 {hit}"
+
+
+def test_storage_ordering(corpus):
+    """float > quantized > binary payloads (paper Table III ordering)."""
+    key = jax.random.PRNGKey(1)
+    sizes = {}
+    # binary uses K=64 (b=6 bits) so the bit-packing is visible; uint8
+    # codes and 8-bit binary coincide at K=256 by construction.
+    for mode, k in (("float", 256), ("quantized", 256), ("binary", 64)):
+        cfg = pipe.HPCConfig(k=k, p=100.0, mode=mode, prune_side="none",
+                             kmeans_iters=3)
+        index = pipe.build_index(key, corpus.doc_patches, corpus.doc_mask,
+                                 corpus.doc_salience, cfg)
+        sizes[mode] = pipe.storage_bytes(index, cfg)["payload"]
+    n_codes = 256 * 16
+    assert sizes["float"] == n_codes * 32 * 4
+    assert sizes["quantized"] == n_codes            # 1 B/code -> 128x here
+    assert sizes["binary"] == (n_codes * 6 + 7) // 8
+    assert sizes["float"] > sizes["quantized"] > sizes["binary"]
+
+
+def test_pruning_reduces_index_payload(corpus):
+    key = jax.random.PRNGKey(1)
+    cfgs = [pipe.HPCConfig(k=64, p=p, mode="quantized", prune_side="doc",
+                           kmeans_iters=3) for p in (100.0, 60.0, 40.0)]
+    payloads = []
+    for cfg in cfgs:
+        index = pipe.build_index(key, corpus.doc_patches, corpus.doc_mask,
+                                 corpus.doc_salience, cfg)
+        payloads.append(pipe.storage_bytes(index, cfg)["payload"])
+    assert payloads[0] > payloads[1] > payloads[2]
+    assert payloads[1] == pytest.approx(payloads[0] * 0.625, rel=0.01)
+
+
+def test_ivf_probes_subset_but_recovers(corpus):
+    key = jax.random.PRNGKey(2)
+    cfg = pipe.HPCConfig(k=64, p=100.0, mode="quantized", index="ivf",
+                         prune_side="none", kmeans_iters=8,
+                         ivf=idx.IVFConfig(n_list=16, n_probe=16, iters=8))
+    index = pipe.build_index(key, corpus.doc_patches, corpus.doc_mask,
+                             corpus.doc_salience, cfg)
+    assert idx.ivf_drop_rate(index.ivf, 256) < 0.01
+    # probing all lists == flat search results (same top-1)
+    cfg_flat = pipe.HPCConfig(k=64, p=100.0, mode="quantized", index="flat",
+                              prune_side="none", kmeans_iters=8)
+    index_flat = pipe.build_index(key, corpus.doc_patches, corpus.doc_mask,
+                                  corpus.doc_salience, cfg_flat)
+    s_ivf, ids_ivf = pipe.query(index, corpus.query_patches,
+                                corpus.query_mask, corpus.query_salience,
+                                cfg, k=1)
+    s_flat, ids_flat = pipe.query(index_flat, corpus.query_patches,
+                                  corpus.query_mask, corpus.query_salience,
+                                  cfg_flat, k=1)
+    # near-duplicate docs quantize to identical codes -> top-1 ids can tie;
+    # the SCORES must agree when every bucket is probed.
+    np.testing.assert_allclose(np.asarray(s_ivf), np.asarray(s_flat),
+                               atol=1e-3)
+    agree = float(np.mean(np.asarray(ids_ivf) == np.asarray(ids_flat)))
+    assert agree > 0.5
+
+
+def test_rerank_never_hurts_target_rank(corpus):
+    key = jax.random.PRNGKey(3)
+    base = pipe.HPCConfig(k=64, p=40.0, mode="quantized", prune_side="doc",
+                          kmeans_iters=8, rerank=0)
+    rr = pipe.HPCConfig(k=64, p=40.0, mode="quantized", prune_side="doc",
+                        kmeans_iters=8, rerank=32)
+    i1 = pipe.build_index(key, corpus.doc_patches, corpus.doc_mask,
+                          corpus.doc_salience, base)
+    _, ids0 = pipe.query(i1, corpus.query_patches, corpus.query_mask,
+                         corpus.query_salience, base, k=10)
+    _, ids1 = pipe.query(i1, corpus.query_patches, corpus.query_mask,
+                         corpus.query_salience, rr, k=10)
+    h0 = _target_hit_rate(ids0, corpus.relevance)
+    h1 = _target_hit_rate(ids1, corpus.relevance)
+    assert h1 >= h0 - 0.05  # rerank on unpruned codes shouldn't hurt

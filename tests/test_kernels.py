@@ -1,0 +1,97 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles, swept over
+shapes and dtypes (deliverable (c) kernel requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quantization as quant
+from repro.kernels import ops, ref
+
+SHAPES = [  # (B, Mq, D, N, Md)
+    (1, 4, 16, 16, 8),
+    (2, 8, 32, 48, 10),
+    (3, 5, 64, 64, 17),   # odd Md, padding path
+    (2, 16, 128, 32, 32),
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_maxsim_kernel(shape, dtype):
+    b, mq, d, n, md = shape
+    key = jax.random.PRNGKey(sum(shape))
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, mq, d), dtype)
+    docs = jax.random.normal(ks[1], (n, md, d), dtype)
+    qm = jax.random.uniform(ks[2], (b, mq)) > 0.2
+    dm = jax.random.uniform(ks[3], (n, md)) > 0.2
+    got = ops.maxsim(q, qm, docs, dm, impl="interpret", block_docs=16)
+    want = ops.maxsim(q, qm, docs, dm, impl="ref")
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("k", [16, 256])
+def test_quantized_maxsim_kernel(shape, k):
+    b, mq, d, n, md = shape
+    key = jax.random.PRNGKey(sum(shape) + k)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, mq, d))
+    cb = jax.random.normal(ks[1], (k, d))
+    codes = jax.random.randint(ks[2], (n, md), 0, k)
+    qm = jnp.ones((b, mq), bool)
+    dm = jax.random.uniform(ks[3], (n, md)) > 0.2
+    got = ops.quantized_maxsim(q, qm, codes, dm, cb, impl="interpret",
+                               block_docs=16)
+    want = ops.quantized_maxsim(q, qm, codes, dm, cb, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                               rtol=1e-4)
+
+
+@pytest.mark.parametrize("bits", [4, 8, 9, 16])
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_hamming_kernel(shape, bits):
+    b, mq, d, n, md = shape
+    key = jax.random.PRNGKey(bits)
+    ks = jax.random.split(key, 4)
+    qc = jax.random.randint(ks[0], (b, mq), 0, 2 ** bits)
+    dc = jax.random.randint(ks[1], (n, md), 0, 2 ** bits)
+    qm = jax.random.uniform(ks[2], (b, mq)) > 0.3
+    dm = jax.random.uniform(ks[3], (n, md)) > 0.3
+    got = ops.hamming_maxsim(qc, qm, dc, dm, bits=bits, impl="interpret",
+                             block_docs=16)
+    want = ops.hamming_maxsim(qc, qm, dc, dm, bits=bits, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 16, 8), (100, 32, 16), (256, 128, 64),
+                                   (130, 8, 4)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign_kernel(n, d, k, dtype):
+    key = jax.random.PRNGKey(n + d + k)
+    x = jax.random.normal(key, (n, d), dtype)
+    c = jax.random.normal(jax.random.PRNGKey(1), (k, d), dtype)
+    got = ops.kmeans_assign(x, c, impl="interpret", block_n=32)
+    want = ops.kmeans_assign(x, c, impl="ref")
+    # bf16 ties can flip argmin; allow tiny disagreement for bf16
+    agree = float(np.mean(np.asarray(got) == np.asarray(want)))
+    assert agree >= (1.0 if dtype == jnp.float32 else 0.98)
+
+
+def test_kernel_consistency_with_core_library(rng):
+    """ops.quantized_maxsim (kernel path) == core.late_interaction ADC."""
+    from repro.core import late_interaction as li
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 6, 16))
+    docs = jax.random.normal(ks[1], (24, 9, 16))
+    cb = jax.random.normal(ks[2], (32, 16))
+    codes = quant.quantize(docs, cb)
+    qm = jnp.ones((2, 6), bool)
+    dm = jnp.ones((24, 9), bool)
+    a = ops.quantized_maxsim(q, qm, codes, dm, cb, impl="interpret",
+                             block_docs=8)
+    b = li.quantized_maxsim(q, qm, codes, dm, cb)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

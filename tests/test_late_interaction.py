@@ -1,0 +1,99 @@
+"""MaxSim late-interaction tests (core/late_interaction.py)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import late_interaction as li
+from repro.core import quantization as quant
+
+
+def _data(key, b=3, mq=5, n=16, md=7, d=8, k=16):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, mq, d))
+    docs = jax.random.normal(ks[1], (n, md, d))
+    qm = jax.random.uniform(ks[2], (b, mq)) > 0.2
+    dm = jax.random.uniform(ks[3], (n, md)) > 0.2
+    cb = jax.random.normal(ks[0], (k, d))
+    codes = quant.quantize(docs, cb)
+    return q, qm, docs, dm, cb, codes
+
+
+def test_maxsim_brute_force_equivalence(rng):
+    q, qm, docs, dm, cb, codes = _data(rng)
+    got = li.maxsim(q, qm, docs, dm)
+    # O(B*N*Mq*Md) python reference
+    b, n = q.shape[0], docs.shape[0]
+    for bi in range(b):
+        for ni in range(n):
+            s = 0.0
+            for i in range(q.shape[1]):
+                if not qm[bi, i]:
+                    continue
+                best = -1e30
+                for j in range(docs.shape[1]):
+                    if dm[ni, j]:
+                        best = max(best, float(q[bi, i] @ docs[ni, j]))
+                s += best
+            assert abs(float(got[bi, ni]) - s) < 1e-3
+
+
+def test_adc_equals_decode_equals_float(rng):
+    q, qm, docs, dm, cb, codes = _data(rng)
+    dec = quant.decode(codes, cb)
+    s_float = li.maxsim(q, qm, dec, dm)
+    s_adc = li.quantized_maxsim(q, qm, codes, dm, cb)
+    s_dec = li.quantized_maxsim_decode(q, qm, codes, dm, cb)
+    np.testing.assert_allclose(np.asarray(s_adc), np.asarray(s_dec),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_adc), np.asarray(s_float),
+                               atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_masked_patches_never_contribute(seed):
+    """Appending masked-out patches must not change any score."""
+    key = jax.random.PRNGKey(seed)
+    q, qm, docs, dm, cb, codes = _data(key, b=2, n=4)
+    s0 = li.maxsim(q, qm, docs, dm)
+    # append garbage patches with mask False
+    garbage = 100.0 + jax.random.normal(key, (4, 3, 8))
+    docs2 = jnp.concatenate([docs, garbage], axis=1)
+    dm2 = jnp.concatenate([dm, jnp.zeros((4, 3), bool)], axis=1)
+    s1 = li.maxsim(q, qm, docs2, dm2)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_property_maxsim_monotone_in_doc_patches(seed):
+    """Adding a VALID doc patch can only increase (or keep) the score."""
+    key = jax.random.PRNGKey(seed)
+    q, qm, docs, dm, cb, codes = _data(key, b=2, n=4)
+    dm_all = jnp.ones_like(dm)
+    s0 = li.maxsim(q, qm, docs[:, :5], dm_all[:, :5])
+    s1 = li.maxsim(q, qm, docs, dm_all)
+    assert bool(jnp.all(s1 >= s0 - 1e-5))
+
+
+def test_binary_maxsim_score_bounds(rng):
+    q, qm, docs, dm, cb, codes = _data(rng, k=16)
+    qc = quant.quantize(q, cb, code_dtype=jnp.uint16)
+    s = li.binary_maxsim(qc, qm, codes, dm, bits=4)
+    max_possible = 4 * int(jnp.sum(qm, axis=1).max())
+    assert int(s.max()) <= max_possible
+
+
+def test_single_vector_baseline_shape(rng):
+    q, qm, docs, dm, *_ = _data(rng)
+    s = li.single_vector_score(q, qm, docs, dm)
+    assert s.shape == (3, 16)
+    assert bool(jnp.all(jnp.abs(s) <= 1.0 + 1e-5))  # cosine in [-1, 1]
+
+
+def test_flops_accounting():
+    full = li.late_interaction_flops(32, 1024, 128, 10_000)
+    adc = li.adc_flops(32, 1024, 128, 256, 10_000)
+    assert adc < full / 1000  # ADC removes per-doc matmuls entirely

@@ -1,0 +1,82 @@
+"""Attention-guided pruning tests (core/pruning.py, paper §III-C)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import pruning
+
+
+def test_keep_count_paper_values():
+    # p=40 keeps 40% -> 60% compute saved (the paper's headline number)
+    assert pruning.keep_count(100, 40.0) == 40
+    assert pruning.compute_saved_fraction(100, 40.0) == 0.6
+    assert pruning.keep_count(100, 60.0) == 60
+    assert pruning.keep_count(10, 1.0) == 1        # clamped to >= 1
+    assert pruning.keep_count(10, 100.0) == 10
+
+
+def test_prune_keeps_most_salient(rng):
+    emb = jax.random.normal(rng, (4, 10, 8))
+    sal = jnp.tile(jnp.arange(10.0)[None], (4, 1))
+    mask = jnp.ones((4, 10), bool)
+    pr = pruning.prune_topp(emb, sal, mask, p=30.0)
+    assert pr.embeddings.shape == (4, 3, 8)
+    np.testing.assert_array_equal(np.asarray(pr.indices),
+                                  np.tile([9, 8, 7], (4, 1)))
+    assert bool(pr.mask.all())
+
+
+def test_prune_respects_mask(rng):
+    emb = jax.random.normal(rng, (1, 6, 4))
+    sal = jnp.array([[9.0, 8.0, 7.0, 6.0, 5.0, 4.0]])
+    mask = jnp.array([[False, False, True, True, True, True]])
+    pr = pruning.prune_topp(emb, sal, mask, p=50.0)
+    # top-3 among VALID = positions 2,3,4 (not the masked 0,1)
+    np.testing.assert_array_equal(np.asarray(pr.indices[0]), [2, 3, 4])
+
+
+def test_prune_pads_with_invalid_when_few_valid(rng):
+    emb = jax.random.normal(rng, (1, 6, 4))
+    sal = jnp.ones((1, 6))
+    mask = jnp.zeros((1, 6), bool).at[0, 0].set(True)
+    pr = pruning.prune_topp(emb, sal, mask, p=80.0)   # keep 5 > 1 valid
+    assert int(pr.mask.sum()) == 1
+    # invalid slots zeroed
+    assert float(jnp.abs(pr.embeddings[0, 1:]).sum()) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(2, 24), p=st.floats(1.0, 100.0))
+def test_property_pruned_salience_is_topk(m, p):
+    key = jax.random.PRNGKey(m)
+    sal = jax.random.uniform(key, (1, m))
+    emb = jnp.ones((1, m, 2))
+    mask = jnp.ones((1, m), bool)
+    pr = pruning.prune_topp(emb, sal, mask, p=p)
+    k = pruning.keep_count(m, p)
+    expected = np.sort(np.asarray(sal[0]))[::-1][:k]
+    np.testing.assert_allclose(np.sort(np.asarray(pr.salience[0]))[::-1],
+                               expected, rtol=1e-6)
+
+
+def test_prune_codes_matches_prune_embeddings(rng):
+    codes = jax.random.randint(rng, (3, 12), 0, 255).astype(jnp.uint8)
+    sal = jax.random.uniform(jax.random.PRNGKey(5), (3, 12))
+    mask = jnp.ones((3, 12), bool)
+    kept_codes, idx, msk, _ = pruning.prune_topp_codes(codes, sal, mask,
+                                                       p=50.0)
+    pr = pruning.prune_topp(codes[..., None].astype(jnp.float32), sal, mask,
+                            p=50.0)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(pr.indices))
+    np.testing.assert_array_equal(
+        np.asarray(kept_codes),
+        np.asarray(pr.embeddings[..., 0]).astype(np.uint8))
+
+
+def test_salience_from_attention():
+    attn = jnp.zeros((2, 3, 4, 4)).at[:, :, :, 1].set(1.0)  # all mass on key 1
+    sal = pruning.salience_from_attention(attn)
+    assert sal.shape == (2, 4)
+    assert float(sal[0, 1]) == 1.0 and float(sal[0, 0]) == 0.0

@@ -1,0 +1,88 @@
+"""K-Means quantization unit + property tests (core/quantization.py)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import quantization as quant
+
+
+def test_kmeans_reduces_mse(rng):
+    x = jax.random.normal(rng, (512, 16))
+    cfg = quant.KMeansConfig(k=32, iters=15)
+    cents, mses = quant.kmeans_fit(rng, x, cfg)
+    assert cents.shape == (32, 16)
+    assert float(mses[-1]) <= float(mses[0])
+    # codebook should beat a random codebook
+    rand_cents = jax.random.normal(jax.random.PRNGKey(9), (32, 16))
+    assert (quant.quantization_error(x, cents)
+            < quant.quantization_error(x, rand_cents))
+
+
+def test_kmeans_recovers_planted_clusters(rng):
+    centers = jax.random.normal(rng, (8, 8)) * 5
+    idx = jax.random.randint(jax.random.PRNGKey(1), (1024,), 0, 8)
+    x = centers[idx] + 0.05 * jax.random.normal(jax.random.PRNGKey(2),
+                                                (1024, 8))
+    cents, _ = quant.kmeans_fit(rng, x, quant.KMeansConfig(k=8, iters=25))
+    err = quant.quantization_error(x, cents)
+    assert float(err) < 0.1  # ~noise floor (8 dims * 0.05^2 = 0.02)
+
+
+def test_assign_is_nearest(rng):
+    x = jax.random.normal(rng, (64, 4))
+    c = jax.random.normal(jax.random.PRNGKey(3), (7, 4))
+    codes = quant.assign(x, c)
+    d = jnp.sum((x[:, None] - c[None]) ** 2, -1)
+    np.testing.assert_array_equal(np.asarray(codes), np.argmin(d, -1))
+
+
+def test_quantize_decode_shapes_and_dtype(rng):
+    x = jax.random.normal(rng, (10, 6, 16))
+    c = jax.random.normal(jax.random.PRNGKey(3), (256, 16))
+    codes = quant.quantize(x, c)
+    assert codes.shape == (10, 6) and codes.dtype == jnp.uint8
+    dec = quant.decode(codes, c)
+    assert dec.shape == x.shape
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.sampled_from([128, 256, 512]))
+def test_paper_bits_arithmetic(k):
+    """b = ceil(log2 K): 7/8/9 bits for the paper's K values."""
+    cfg = quant.KMeansConfig(k=k)
+    assert cfg.bits == {128: 7, 256: 8, 512: 9}[k]
+    assert cfg.code_dtype == (jnp.uint8 if k <= 256 else jnp.uint16)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(32, 128), d=st.sampled_from([4, 8]),
+       k=st.sampled_from([4, 16]))
+def test_property_decode_error_bounded_by_worst_pair(n, d, k):
+    """Reconstruction error <= max pairwise distance (codebook covers x)."""
+    key = jax.random.PRNGKey(n * d * k)
+    x = jax.random.normal(key, (n, d))
+    cents, _ = quant.kmeans_fit(key, x, quant.KMeansConfig(k=k, iters=5))
+    codes = quant.assign(x, cents)
+    err = jnp.sum((x - quant.decode(codes, cents)) ** 2, -1)
+    # nearest-centroid property: err <= distance to ANY centroid
+    d_all = jnp.sum((x[:, None] - cents[None]) ** 2, -1)
+    assert bool(jnp.all(err <= jnp.min(d_all, -1) + 1e-5))
+
+
+def test_pq_roundtrip(rng):
+    x = jax.random.normal(rng, (256, 32))
+    cbs = quant.pq_fit(rng, x, quant.PQConfig(k=16, n_sub=4, iters=8))
+    assert cbs.shape == (4, 16, 8)
+    codes = quant.pq_quantize(x, cbs)
+    assert codes.shape == (256, 4)
+    dec = quant.pq_decode(codes, cbs)
+    assert dec.shape == x.shape
+    # PQ with more subspaces should reconstruct better than K=16 flat
+    flat_c, _ = quant.kmeans_fit(rng, x, quant.KMeansConfig(k=16, iters=8))
+    pq_err = float(jnp.mean(jnp.sum((x - dec) ** 2, -1)))
+    flat_err = float(quant.quantization_error(x, flat_c))
+    assert pq_err < flat_err

@@ -1,0 +1,132 @@
+"""Serving (continuous batching) + RAG integration tests."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pipeline as hpc
+from repro.core import rag
+from repro.data import synthetic
+from repro.models import transformer as T
+from repro.serving.server import RetrievalServer, ServeConfig
+
+
+def test_server_batches_and_matches_direct(rng):
+    spec = synthetic.CorpusSpec(n_docs=128, n_queries=16, n_patches=8,
+                                n_q_patches=4, dim=16, n_topics=4)
+    data = synthetic.make_retrieval_corpus(rng, spec)
+    cfg = hpc.HPCConfig(k=16, p=100.0, mode="quantized", prune_side="none",
+                        kmeans_iters=5)
+    index = hpc.build_index(rng, data.doc_patches, data.doc_mask,
+                            data.doc_salience, cfg)
+
+    @jax.jit
+    def search(q, qm, qs):
+        return hpc.query(index, q, qm, qs, cfg, k=5)
+
+    server = RetrievalServer(search, ServeConfig(max_batch=4, top_k=5,
+                                                 max_wait_ms=5.0))
+    # direct reference
+    ref_s, ref_i = search(data.query_patches, data.query_mask,
+                          data.query_salience)
+    reqs = [server.submit(data.query_patches[i], data.query_mask[i],
+                          data.query_salience[i]) for i in range(16)]
+    for i, r in enumerate(reqs):
+        assert r.event.wait(30)
+        s, ids = r.result
+        np.testing.assert_allclose(s, np.asarray(ref_s[i]), atol=1e-4)
+        np.testing.assert_array_equal(ids, np.asarray(ref_i[i]))
+    st = server.stats()
+    assert st["n"] == 16
+    assert st["mean_batch"] > 1.0     # coalescing actually happened
+    server.close()
+
+
+def test_rouge_l():
+    assert rag.rouge_l([1, 2, 3], [1, 2, 3]) == 1.0
+    assert rag.rouge_l([1, 2, 3], [4, 5, 6]) == 0.0
+    f1 = rag.rouge_l([1, 2, 3, 4], [1, 3])
+    assert 0 < f1 < 1
+    assert rag.rouge_l([], [1]) == 0.0
+
+
+def test_hallucination_rate():
+    gen = [{1, 2}, {3}, {4, 5}]
+    ctx = [{1, 2}, {9}, {4}]
+    # 0/2 bad, 1/1 bad, 1/2 bad -> 2/5
+    assert rag.hallucination_rate(gen, ctx) == pytest.approx(0.4)
+    assert rag.hallucination_rate([set()], [set()]) == 0.0
+
+
+def test_extract_facts():
+    toks = np.array([[3, 4, 0, 1], [2, 7, 7, 99]])
+    out = rag.extract_facts(toks, fact0=3, n_facts=10)
+    assert out[0] == {0, 1}
+    assert out[1] == {4}
+
+
+def test_build_prompt_and_train_batch(rng):
+    corpus, vocab = synthetic.make_fact_corpus(rng, n_docs=32,
+                                               n_facts_vocab=20,
+                                               facts_per_doc=3, dim=8,
+                                               n_patches=6, n_queries=8,
+                                               seq_len=16)
+    rcfg = rag.RAGConfig(top_k_docs=2, facts_per_doc=3, max_answer=3)
+    batch = rag.make_rag_train_batch(rng, corpus, vocab, rcfg, batch=4,
+                                     seq_len=24, n_docs=32)
+    assert batch["tokens"].shape == (4, 24)
+    assert batch["targets"].shape == (4, 24)
+    # only answer positions are supervised
+    n_sup = int((batch["targets"] >= 0).sum())
+    assert n_sup == 4 * 3
+    # supervised targets are fact tokens
+    sup = batch["targets"][batch["targets"] >= 0]
+    assert bool((sup >= vocab["fact0"]).all())
+
+
+def test_greedy_generate_matches_decode(rng):
+    cfg = T.LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                     d_ff=64, vocab=29, q_chunk=8, loss_chunk=8)
+    params = T.init(rng, cfg)
+    prompt = jax.random.randint(rng, (2, 8), 0, 29)
+    gen = rag.greedy_generate(params, prompt, cfg, max_new=3, prompt_len=8)
+    assert gen.shape == (2, 3)
+    # first generated token == argmax of prefill logits
+    logits, _ = T.prefill(params, prompt, cfg, max_len=11)
+    np.testing.assert_array_equal(np.asarray(gen[:, 0]),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+def test_rag_pipeline_end_to_end_smoke(rng):
+    """Full RAG loop with an untrained generator: metrics computable, and
+    retrieval finds the gold doc (the planted corpus makes that easy)."""
+    corpus, vocab = synthetic.make_fact_corpus(rng, n_docs=64,
+                                               n_facts_vocab=400,
+                                               facts_per_doc=3, dim=16,
+                                               n_patches=6, n_queries=12,
+                                               seq_len=16)
+    # the corpus spans ~192 distinct fact prototypes: the codebook must be
+    # large enough to separate them (K=128; the paper's K=256 regime)
+    rcfg = rag.RAGConfig(
+        retriever=hpc.HPCConfig(k=128, p=100.0, mode="quantized",
+                                prune_side="none", kmeans_iters=15),
+        top_k_docs=2, facts_per_doc=3, max_answer=3)
+    index = hpc.build_index(rng, corpus.doc_patches, corpus.doc_mask,
+                            corpus.doc_salience, rcfg.retriever)
+    # check retrieval quality directly: gold doc in top-2
+    _, ids = hpc.query(index, corpus.query_patches, corpus.query_mask,
+                       corpus.query_salience, rcfg.retriever, k=2)
+    hit = np.mean([int(corpus.gold_doc[i]) in set(np.asarray(ids[i]).tolist())
+                   for i in range(12)])
+    assert hit > 0.7, hit
+
+    lm_cfg = T.LMConfig(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                        d_ff=64, vocab=vocab["size"], q_chunk=8,
+                        loss_chunk=8)
+    gen_params = T.init(rng, lm_cfg)
+    metrics = rag.rag_pipeline(index, gen_params, corpus, rcfg, lm_cfg,
+                               n_facts_vocab=400)
+    for k in ("rouge_l", "hallucination", "latency_ms"):
+        assert k in metrics and np.isfinite(metrics[k])

@@ -1,0 +1,100 @@
+"""Logical-axis sharding resolver tests (dist/sharding.py) — these run on
+the single CPU device; Mesh construction with 1 device is fine for
+resolution logic (axis sizes are what matter)."""
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.sharding import DEFAULT_RULES, Sharder, is_logical_spec
+
+
+def fake_mesh(shape, axes):
+    """Mesh over a fake device grid (resolution only needs axis sizes)."""
+    devs = np.empty(shape, dtype=object)
+    it = np.nditer(devs, flags=["multi_index", "refs_ok"])
+    d = jax.devices()[0]
+    while not it.finished:
+        devs[it.multi_index] = d
+        it.iternext()
+    return Mesh(devs, axes)
+
+
+@pytest.fixture
+def sharder():
+    return Sharder(fake_mesh((16, 16), ("data", "model")))
+
+
+@pytest.fixture
+def sharder_mp():
+    return Sharder(fake_mesh((2, 16, 16), ("pod", "data", "model")))
+
+
+def test_divisible_dims_shard(sharder):
+    assert sharder.resolve(("embed", "mlp"), (4096, 13696)) == P(None, "model")
+    assert sharder.resolve(("batch", None), (256, 4096)) == P("data", None)
+
+
+def test_divisibility_fallback_replicates(sharder):
+    # qwen2: 12 heads on a 16-way axis -> replicate
+    assert sharder.resolve(("batch", None, "heads", None),
+                           (256, 4096, 12, 128)) == P("data", None, None, None)
+    # but the fused qkv_out dim (1536) shards
+    assert sharder.resolve(("embed", "qkv_out"), (1536, 1536)) == \
+        P(None, "model")
+
+
+def test_multi_axis_drop_from_right(sharder_mp):
+    # batch=(pod,data): 256 % 32 == 0 -> both axes
+    assert sharder_mp.resolve(("batch",), (256,)) == P(("pod", "data"))
+    # edges: 61859140 not divisible by model/data products -> pod only
+    got = sharder_mp.resolve(("edge",), (61859140,))
+    assert got == P(("pod",))
+
+
+def test_axis_conflict_avoided(sharder):
+    # two dims both wanting "model": second one drops it
+    spec = sharder.resolve(("mlp", "vocab"), (512, 1600))
+    assert spec == P("model", None)
+
+
+def test_missing_axes_ignored(sharder):
+    # "pod" not in single-pod mesh -> skipped silently
+    assert sharder.resolve(("batch",), (256,)) == P("data")
+
+
+def test_scalar_and_empty(sharder):
+    assert sharder.resolve((), ()) == P()
+    assert sharder.resolve((None,), (7,)) == P(None)
+
+
+@settings(max_examples=50, deadline=None)
+@given(dim=st.integers(1, 10000))
+def test_property_resolved_dims_always_divide(dim):
+    sharder = Sharder(fake_mesh((16, 16), ("data", "model")))
+    spec = sharder.resolve(("mlp",), (dim,))
+    axes = spec[0]
+    if axes is not None:
+        names = (axes,) if isinstance(axes, str) else axes
+        prod = 1
+        for a in names:
+            prod *= dict(zip(sharder.mesh.axis_names,
+                             sharder.mesh.devices.shape))[a]
+        assert dim % prod == 0
+
+
+def test_is_logical_spec():
+    from repro.models.transformer import KVCache
+    assert is_logical_spec(("embed", "mlp"))
+    assert is_logical_spec((None, "model"))
+    assert is_logical_spec(())
+    assert not is_logical_spec(KVCache((None,), (None,)))
+    assert not is_logical_spec(("embed", 3))
+
+
+def test_all_rule_axes_exist_in_production_meshes():
+    for name, axes in DEFAULT_RULES.items():
+        for a in axes:
+            assert a in ("pod", "data", "model"), (name, a)
