@@ -16,9 +16,9 @@ import numpy as np
 
 from benchmarks.common import time_fn
 from repro.core import late_interaction as li
-from repro.core import pipeline as hpc
 from repro.core import pruning
 from repro.data import synthetic
+from repro.retrieval import Corpus, HPCConfig, Query, Retriever
 
 
 def run(seed: int = 0, verbose: bool = True) -> List[dict]:
@@ -28,24 +28,25 @@ def run(seed: int = 0, verbose: bool = True) -> List[dict]:
     q, qm, qs = (data.query_patches, data.query_mask, data.query_salience)
 
     configs = [
-        ("ColPali-Full", hpc.HPCConfig(mode="float", prune_side="none")),
-        ("PQ-Only(K=256)", hpc.HPCConfig(k=256, mode="quantized",
-                                         prune_side="none")),
-        ("HPC(K=256,p=60)", hpc.HPCConfig(k=256, p=60.0, mode="quantized",
-                                          prune_side="doc")),
-        ("HPC(K=512,p=40)", hpc.HPCConfig(k=512, p=40.0, mode="quantized",
-                                          prune_side="doc")),
-        ("HPC-Binary(K=512)", hpc.HPCConfig(k=512, p=60.0, mode="binary",
-                                            prune_side="doc")),
+        ("ColPali-Full", HPCConfig(backend="float_flat", prune_side="none")),
+        ("PQ-Only(K=256)", HPCConfig(k=256, backend="flat",
+                                     prune_side="none")),
+        ("HPC(K=256,p=60)", HPCConfig(k=256, p=60.0, backend="flat",
+                                      prune_side="doc")),
+        ("HPC(K=512,p=40)", HPCConfig(k=512, p=40.0, backend="flat",
+                                      prune_side="doc")),
+        ("HPC-Binary(K=512)", HPCConfig(k=512, p=60.0, backend="hamming",
+                                        prune_side="doc")),
     ]
 
     rows = []
     t_full = None
     for name, cfg in configs:
-        index = hpc.build_index(key, data.doc_patches, data.doc_mask,
-                                data.doc_salience, cfg)
-        fn = jax.jit(lambda a, b, c, _cfg=cfg, _ix=index:
-                     hpc.query(_ix, a, b, c, _cfg, k=10))
+        retriever = Retriever(cfg)
+        state = retriever.build(key, Corpus(data.doc_patches, data.doc_mask,
+                                            data.doc_salience))
+        fn = jax.jit(lambda a, b, c, _r=retriever, _s=state:
+                     _r.search(_s, Query(a, b, c), k=10))
         t = time_fn(fn, q, qm, qs)
         per_query_ms = t / q.shape[0] * 1e3
         if name == "ColPali-Full":

@@ -17,8 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import late_interaction as li
-from repro.core import pipeline as hpc
 from repro.core import rag
+from repro.retrieval import Corpus, HPCConfig, Retriever
 from repro.data import synthetic
 from repro.models import transformer as T
 from repro.optim import optimizer as opt
@@ -61,19 +61,21 @@ def run(seed: int = 0, steps: int = 300, verbose: bool = True) -> List[dict]:
                                          steps=steps, verbose=verbose)
 
     retrievers = [
-        ("ColPali-Full", hpc.HPCConfig(mode="float", prune_side="none")),
-        ("HPC(K=256,p=60)", hpc.HPCConfig(k=256, p=60.0, mode="quantized",
-                                          prune_side="doc", rerank=8)),
-        ("HPC-Binary(K=512)", hpc.HPCConfig(k=512, p=60.0, mode="binary",
-                                            prune_side="doc")),
+        ("ColPali-Full", HPCConfig(backend="float_flat",
+                                   prune_side="none")),
+        ("HPC(K=256,p=60)", HPCConfig(k=256, p=60.0, backend="flat",
+                                      prune_side="doc", rerank=8)),
+        ("HPC-Binary(K=512)", HPCConfig(k=512, p=60.0, backend="hamming",
+                                        prune_side="doc")),
     ]
     rows = []
     for name, cfg in retrievers:
         import dataclasses
         rcfg = dataclasses.replace(rcfg_base, retriever=cfg)
-        index = hpc.build_index(key, corpus.doc_patches, corpus.doc_mask,
-                                corpus.doc_salience, cfg)
-        m = rag.rag_pipeline(index, gen_params, corpus, rcfg, lm_cfg,
+        state = Retriever(cfg).build(
+            key, Corpus(corpus.doc_patches, corpus.doc_mask,
+                        corpus.doc_salience))
+        m = rag.rag_pipeline(state, gen_params, corpus, rcfg, lm_cfg,
                              n_facts_vocab=N_FACTS)
         rows.append({"retriever": name, **m})
         if verbose:

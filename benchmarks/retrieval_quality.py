@@ -15,15 +15,17 @@ import numpy as np
 
 from benchmarks.common import retrieval_metrics
 from repro.core import late_interaction as li
-from repro.core import pipeline as hpc
 from repro.data import synthetic
+from repro.retrieval import Corpus, HPCConfig, Query, Retriever
 
 
-def _run_config(key, data, cfg: hpc.HPCConfig, k: int = 10) -> Dict[str, float]:
-    index = hpc.build_index(key, data.doc_patches, data.doc_mask,
-                            data.doc_salience, cfg)
-    _, ids = hpc.query(index, data.query_patches, data.query_mask,
-                       data.query_salience, cfg, k=k)
+def _run_config(key, data, cfg: HPCConfig, k: int = 10) -> Dict[str, float]:
+    retriever = Retriever(cfg)
+    state = retriever.build(key, Corpus(data.doc_patches, data.doc_mask,
+                                        data.doc_salience))
+    _, ids = retriever.search(state, Query(data.query_patches,
+                                           data.query_mask,
+                                           data.query_salience), k=k)
     return retrieval_metrics(np.asarray(ids), np.asarray(data.relevance), k)
 
 
@@ -35,28 +37,33 @@ def _distilcol(data, k: int = 10) -> Dict[str, float]:
 
 
 CONFIGS = [
-    ("ColPali-Full", hpc.HPCConfig(mode="float", prune_side="none")),
-    ("PQ-Only(K=256)", hpc.HPCConfig(k=256, mode="quantized",
-                                     prune_side="none")),
-    ("HPC(K=256,p=60)", hpc.HPCConfig(k=256, p=60.0, mode="quantized",
-                                      prune_side="doc", rerank=32)),
-    ("HPC(K=512,p=40)", hpc.HPCConfig(k=512, p=40.0, mode="quantized",
-                                      prune_side="doc", rerank=32)),
-    ("HPC-Binary(K=512)", hpc.HPCConfig(k=512, p=60.0, mode="binary",
-                                        prune_side="doc")),
+    ("ColPali-Full", HPCConfig(backend="float_flat", prune_side="none")),
+    ("PQ-Only(K=256)", HPCConfig(k=256, backend="flat",
+                                 prune_side="none")),
+    ("HPC(K=256,p=60)", HPCConfig(k=256, p=60.0, backend="flat",
+                                  prune_side="doc", rerank=32)),
+    ("HPC(K=512,p=40)", HPCConfig(k=512, p=40.0, backend="flat",
+                                  prune_side="doc", rerank=32)),
+    ("HPC-Binary(K=512)", HPCConfig(k=512, p=60.0, backend="hamming",
+                                    prune_side="doc")),
 ]
 
 
-def run(seed: int = 0, verbose: bool = True, stress: bool = True
-        ) -> List[dict]:
+def run(seed: int = 0, verbose: bool = True, stress: bool = True,
+        datasets=None) -> List[dict]:
     """Tables I/II + a beyond-paper codebook-capacity stress ablation
     (STRESS corpus plants 3072 prototypes >> K: quantization must degrade —
-    quantifies the paper's implicit clusterability assumption)."""
+    quantifies the paper's implicit clusterability assumption).
+
+    `datasets` overrides the (name, CorpusSpec) list — used by the CI
+    smoke run with a tiny corpus.
+    """
     rows = []
-    datasets = [("ViDoRe-like", synthetic.VIDORE),
-                ("SEC-like", synthetic.SEC_FILINGS)]
-    if stress:
-        datasets.append(("STRESS(3072proto)", synthetic.STRESS))
+    if datasets is None:
+        datasets = [("ViDoRe-like", synthetic.VIDORE),
+                    ("SEC-like", synthetic.SEC_FILINGS)]
+        if stress:
+            datasets.append(("STRESS(3072proto)", synthetic.STRESS))
     for ds_name, spec in datasets:
         key = jax.random.PRNGKey(seed)
         data = synthetic.make_retrieval_corpus(key, spec)

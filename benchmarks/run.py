@@ -15,11 +15,30 @@ from benchmarks import (kernel_bench, latency, rag_bench, retrieval_quality,
 from benchmarks.common import csv_row
 
 
+def smoke() -> int:
+    """CI smoke: retrieval quality + storage on a tiny corpus (~seconds)."""
+    from repro.data import synthetic
+    tiny = synthetic.CorpusSpec(n_docs=128, n_queries=8, n_patches=8,
+                                n_q_patches=4, dim=16, n_topics=4)
+    print("== smoke: retrieval quality (tiny corpus) ==")
+    rows = retrieval_quality.run(stress=False, datasets=[("smoke", tiny)])
+    assert rows, "smoke retrieval produced no rows"
+    print("== smoke: storage footprint ==")
+    storage.run(verbose=False)
+    print("SMOKE_OK")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="fewer RAG generator steps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-config CI smoke run (quality + storage only)")
     args = ap.parse_args(argv)
+
+    if args.smoke:
+        return smoke()
 
     csv = []
 

@@ -13,9 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import binary, pipeline as hpc, quantization as quant
+from repro.core import binary, quantization as quant
 from repro.data import synthetic
 from repro.models import recsys
+from repro.retrieval import Corpus, HPCConfig, Retriever
 
 
 PAPER_DOCS, PAPER_PATCHES, D = 100_000, 50, 128
@@ -48,11 +49,11 @@ def run(verbose: bool = True) -> List[dict]:
     add("ColPali-Full fp32", _scale(data.doc_patches.size * 4, n_codes))
 
     # single 1-byte K-Means code (the paper's text: '1-byte code index')
-    cfg = hpc.HPCConfig(k=256, mode="quantized", prune_side="none",
-                        kmeans_iters=5)
-    index = hpc.build_index(key, data.doc_patches, data.doc_mask,
-                            data.doc_salience, cfg)
-    payload = hpc.storage_bytes(index, cfg)["payload"]
+    retriever = Retriever(HPCConfig(k=256, backend="flat",
+                                    prune_side="none", kmeans_iters=5))
+    state = retriever.build(key, Corpus(data.doc_patches, data.doc_mask,
+                                        data.doc_salience))
+    payload = retriever.storage_bytes(state)["payload"]
     add("K-Means K=256 (1 B/code)", _scale(payload, n_codes),
         "paper text's scheme; its '32x' table row is PQ-16 below")
 

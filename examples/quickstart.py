@@ -12,8 +12,8 @@ import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.common import retrieval_metrics
-from repro.core import pipeline as hpc
 from repro.data import synthetic
+from repro.retrieval import Corpus, HPCConfig, Query, Retriever
 
 
 def main():
@@ -23,32 +23,33 @@ def main():
                                 patches_per_topic=10, noise=0.2,
                                 salient_frac=0.4)
     data = synthetic.make_retrieval_corpus(key, spec)
+    corpus = Corpus(data.doc_patches, data.doc_mask, data.doc_salience)
+    queries = Query(data.query_patches, data.query_mask, data.query_salience)
 
     configs = {
-        "ColPali-Full (fp32)": hpc.HPCConfig(mode="float",
-                                             prune_side="none"),
-        "HPC quantized K=256 p=60": hpc.HPCConfig(k=256, p=60.0,
-                                                  mode="quantized",
-                                                  prune_side="doc",
-                                                  rerank=32),
-        "HPC binary K=512": hpc.HPCConfig(k=512, p=60.0, mode="binary",
-                                          prune_side="doc"),
+        "ColPali-Full (fp32)": HPCConfig(backend="float_flat",
+                                         prune_side="none"),
+        "HPC quantized K=256 p=60": HPCConfig(k=256, p=60.0,
+                                              backend="flat",
+                                              prune_side="doc",
+                                              rerank=32),
+        "HPC binary K=512": HPCConfig(k=512, p=60.0, backend="hamming",
+                                      prune_side="doc"),
     }
     for name, cfg in configs.items():
+        retriever = Retriever(cfg)
         t0 = time.perf_counter()
-        index = hpc.build_index(key, data.doc_patches, data.doc_mask,
-                                data.doc_salience, cfg)
-        jax.block_until_ready(index.codebook)
+        state = retriever.build(key, corpus)
+        jax.block_until_ready(state.codebook)
         t_build = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        _, ids = hpc.query(index, data.query_patches, data.query_mask,
-                           data.query_salience, cfg, k=10)
+        _, ids = retriever.search(state, queries, k=10)
         ids = jax.block_until_ready(ids)
         t_query = (time.perf_counter() - t0) / 64 * 1e3
 
         m = retrieval_metrics(np.asarray(ids), np.asarray(data.relevance))
-        sb = hpc.storage_bytes(index, cfg)
+        sb = retriever.storage_bytes(state)
         print(f"{name:28s} nDCG@10={m['ndcg@10']:.3f} "
               f"R@10={m['recall@10']:.3f} | payload "
               f"{sb['payload']/1e6:7.2f} MB | build {t_build:5.1f}s | "

@@ -12,5 +12,5 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    main(["--n-docs", "2048", "--queries", "128", "--mode", "quantized",
+    main(["--n-docs", "2048", "--queries", "128", "--backend", "flat",
           "--k", "256", "--p", "60", "--max-batch", "8"])

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import retrieval_metrics
-from repro.core import pipeline as hpc
+from repro.retrieval import Corpus, HPCConfig, Query, Retriever
 from repro.data import synthetic
 from repro.data.pipeline import PrefetchPipeline
 from repro.models import colpali, transformer as T
@@ -97,11 +97,12 @@ def main():
         # queries: encode their patch views through the same tower
         q_emb, q_sal = colpali.encode_doc(p, eval_data.query_patches,
                                           eval_data.query_mask, enc)
-        cfg = hpc.HPCConfig(k=64, p=60.0, mode="quantized",
-                            prune_side="doc", kmeans_iters=10, rerank=32)
-        index = hpc.build_index(key, d_emb, eval_data.doc_mask, d_sal, cfg)
-        _, ids = hpc.query(index, q_emb, eval_data.query_mask, q_sal, cfg,
-                           k=10)
+        r = Retriever(HPCConfig(k=64, p=60.0, backend="flat",
+                                prune_side="doc", kmeans_iters=10,
+                                rerank=32))
+        state = r.build(key, Corpus(d_emb, eval_data.doc_mask, d_sal))
+        _, ids = r.search(state, Query(q_emb, eval_data.query_mask, q_sal),
+                          k=10)
         return retrieval_metrics(np.asarray(ids),
                                  np.asarray(eval_data.relevance))
 

@@ -50,8 +50,8 @@ COLPALI_HPC = ArchSpec(
             proj_dim=128,            # paper: D=128
             n_patches=1024,          # 32x32 page grid (ColPali)
             query_len=32),
-        hpc=HPCConfig(k=256, p=60.0, prune_side="doc", mode="quantized",
-                      index="flat", rerank=32)),
+        hpc=HPCConfig(k=256, p=60.0, prune_side="doc", backend="flat",
+                      rerank=32)),
     smoke_config=HPCColPaliArch(
         encoder=ColPaliConfig(
             name="colpali-smoke",
@@ -60,8 +60,8 @@ COLPALI_HPC = ArchSpec(
                 n_kv_heads=1, d_ff=96, vocab=128, head_dim=16,
                 qkv_bias=True, q_chunk=16, loss_chunk=16),
             d_patch=24, proj_dim=16, n_patches=16, query_len=8),
-        hpc=HPCConfig(k=16, p=60.0, prune_side="doc", mode="quantized",
-                      index="flat", rerank=8, kmeans_iters=5),
+        hpc=HPCConfig(k=16, p=60.0, prune_side="doc", backend="flat",
+                      rerank=8, kmeans_iters=5),
         corpus_docs=256, kept_patches=10, serve_queries=8, top_k=8),
     shapes=COLPALI_SHAPES,
     source="[this paper; ColQwen2.5 backbone = qwen2-1.5b family]",

@@ -1,12 +1,15 @@
 """HPC-ColPali core: quantization, pruning, binary encoding, late
 interaction, indexes, end-to-end pipeline, and mesh-sharded retrieval."""
 
+# NOTE: `pipeline` is deliberately NOT imported here — it is the v0 compat
+# shim over `repro.retrieval`, whose backends import these core modules;
+# eager-importing it from the package init would create an import cycle.
+# Use `from repro.core import pipeline` (a plain submodule import) as before.
 from repro.core import (  # noqa: F401
     binary,
     distributed,
     index,
     late_interaction,
-    pipeline,
     pruning,
     quantization,
 )

@@ -18,6 +18,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import late_interaction as li
@@ -90,11 +91,11 @@ def sharded_search_fn(mesh: Mesh, corpus_axes: Tuple[str, ...], *, k: int,
         g_i = jnp.take_along_axis(all_i, g_pos, axis=1)
         return g_s, g_i
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         local_search, mesh=mesh,
         in_specs=(P(), P(), corpus_spec, corpus_spec, corpus_spec, P()),
         out_specs=(P(), P()),
-        check_vma=False))
+        check_rep=False))
 
 
 def sharded_kmeans_fn(mesh: Mesh, data_axes: Tuple[str, ...], *,
@@ -122,9 +123,9 @@ def sharded_kmeans_fn(mesh: Mesh, data_axes: Tuple[str, ...], *,
         centroids, _ = jax.lax.scan(step, centroids0, None, length=iters)
         return centroids
 
-    return jax.jit(jax.shard_map(
+    return jax.jit(shard_map(
         fit, mesh=mesh, in_specs=(x_spec, P()), out_specs=P(),
-        check_vma=False))
+        check_rep=False))
 
 
 def corpus_shardings(mesh: Mesh, corpus_axes: Tuple[str, ...]):

@@ -1,192 +1,55 @@
-"""HPC-ColPali end-to-end pipeline (paper §III-E).
+"""HPC-ColPali end-to-end pipeline (paper §III-E) — v0 compatibility shim.
 
-Offline:  patch embeddings + salience -> (doc-side prune) -> K-Means codebook
-          -> quantize -> index (flat / IVF / hamming).
-Online:   query embeddings + salience -> (query-side prune) -> [quantize if
-          binary] -> coarse search -> rerank with full (unpruned) quantized
-          representations -> top-k.
-
-The pipeline object is a thin orchestration layer: every stage is a pure
-function from core/{quantization,pruning,binary,late_interaction,index}.py,
-so each is independently testable, jit-able and shardable.
+The pipeline now lives behind the Retriever API (`repro.retrieval`):
+`HPCConfig` selects an index backend by name, the `Retriever` facade
+composes prune -> backend search -> rerank, and backend state is a single
+tagged pytree instead of v0's four-way Optional union. This module keeps
+the v0 entry points (`build_index` / `query` / `storage_bytes`,
+`HPCIndex`) as thin wrappers so existing callers and tests keep working;
+new code should use `repro.retrieval.Retriever` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Literal, NamedTuple, Optional, Tuple
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import binary as binary_mod
-from repro.core import index as index_mod
-from repro.core import late_interaction as li
-from repro.core import pruning
-from repro.core import quantization as quant
+# submodule imports (not the package) so `repro.core` and
+# `repro.retrieval` can initialise in either order
+from repro.retrieval.base import (  # noqa: F401
+    Corpus, Query, RetrieverState, code_dtype)
+from repro.retrieval.config import HPCConfig  # noqa: F401
+from repro.retrieval.retriever import Retriever
 
 Array = jax.Array
 
-
-@dataclasses.dataclass(frozen=True)
-class HPCConfig:
-    """Tunable knobs of HPC-ColPali (paper §III)."""
-
-    k: int = 256                     # codebook size (128/256/512)
-    p: float = 60.0                  # top-p% patches kept
-    prune_side: Literal["doc", "query", "both", "none"] = "doc"
-    mode: Literal["float", "quantized", "binary"] = "quantized"
-    index: Literal["flat", "ivf"] = "flat"
-    ivf: index_mod.IVFConfig = dataclasses.field(
-        default_factory=index_mod.IVFConfig)
-    kmeans_iters: int = 25
-    rerank: int = 0                  # rerank top-r candidates with unpruned
-                                     # quantized maxsim (0 = off)
-
-    @property
-    def bits(self) -> int:
-        return binary_mod.bits_for_k(self.k)
-
-
-class HPCIndex(NamedTuple):
-    """Built index state (a pytree — shardable/checkpointable)."""
-
-    codebook: Array
-    # primary search structure (exactly one is non-None)
-    flat: Optional[index_mod.FlatIndex]
-    ivf: Optional[index_mod.IVFIndex]
-    hamming: Optional[index_mod.HammingIndex]
-    float_flat: Optional[index_mod.FloatFlatIndex]
-    # unpruned quantized corpus for the rerank stage
-    rerank_codes: Array
-    rerank_mask: Array
+# v0 name for the built index state (same pytree, tagged backend state).
+HPCIndex = RetrieverState
 
 
 def build_index(key: Array, doc_emb: Array, doc_mask: Array,
                 doc_salience: Array, config: HPCConfig) -> HPCIndex:
-    """Offline indexing (paper §III-E1).
+    """Offline indexing (paper §III-E1). v0 wrapper over Retriever.build.
 
     Args:
       doc_emb:      (N, Md, D) float patch embeddings.
       doc_mask:     (N, Md) bool.
       doc_salience: (N, Md) attention-derived salience.
     """
-    n, md, d = doc_emb.shape
-    k_cb, k_ivf = jax.random.split(key)
-
-    if config.mode == "float":
-        # ColPali-Full baseline: no codebook; store raw floats.
-        emb, mask = doc_emb, doc_mask
-        if config.prune_side in ("doc", "both"):
-            pr = pruning.prune_topp(doc_emb, doc_salience, doc_mask, p=config.p)
-            emb, mask = pr.embeddings, pr.mask
-        codebook = jnp.zeros((1, d), doc_emb.dtype)
-        return HPCIndex(codebook, None, None, None,
-                        index_mod.build_float_flat(emb, mask),
-                        rerank_codes=jnp.zeros((n, 1), jnp.uint8),
-                        rerank_mask=jnp.zeros((n, 1), bool))
-
-    # Train the codebook on valid patches only (masked-out rows excluded by
-    # weighting: invalid rows are mapped to zero vectors which form their own
-    # cluster otherwise — instead we drop them via salience-weighted sample).
-    flat = doc_emb.reshape(-1, d)
-    flat_mask = doc_mask.reshape(-1)
-    # Replace invalid rows with resampled valid rows so Lloyd sees real data.
-    valid_idx = jnp.argsort(~flat_mask, stable=True)  # valid rows first
-    n_valid = jnp.sum(flat_mask)
-    gather_idx = jnp.where(
-        jnp.arange(flat.shape[0]) < n_valid,
-        valid_idx,
-        valid_idx[jnp.mod(jnp.arange(flat.shape[0]), jnp.maximum(n_valid, 1))])
-    train_x = flat[gather_idx]
-    codebook, _ = quant.kmeans_fit(
-        k_cb, train_x, quant.KMeansConfig(k=config.k, iters=config.kmeans_iters))
-
-    # Quantize the full corpus (unpruned) — rerank structure.
-    codes_full = quant.quantize(doc_emb, codebook,
-                                code_dtype=jnp.uint8 if config.k <= 256
-                                else jnp.uint16)              # (N, Md)
-
-    # Doc-side pruning for the primary structure.
-    if config.prune_side in ("doc", "both"):
-        codes, _, mask, _ = pruning.prune_topp_codes(
-            codes_full, doc_salience, doc_mask, p=config.p)
-    else:
-        codes, mask = codes_full, doc_mask
-
-    flat_idx = ivf_idx = ham_idx = None
-    if config.mode == "binary":
-        ham_idx = index_mod.build_hamming(codes, mask, config.bits)
-    elif config.index == "ivf":
-        ivf_idx = index_mod.build_ivf(k_ivf, codes, mask, codebook, config.ivf)
-    else:
-        flat_idx = index_mod.build_flat(codes, mask, codebook)
-
-    return HPCIndex(codebook, flat_idx, ivf_idx, ham_idx, None,
-                    rerank_codes=codes_full, rerank_mask=doc_mask)
+    return Retriever(config).build(key, Corpus(doc_emb, doc_mask,
+                                               doc_salience))
 
 
 def query(index: HPCIndex, q_emb: Array, q_mask: Array, q_salience: Array,
           config: HPCConfig, *, k: int) -> Tuple[Array, Array]:
-    """Online query (paper §III-E2 steps 2-5).
+    """Online query (paper §III-E2). v0 wrapper over Retriever.search.
 
     Returns (scores (B, k), doc_ids (B, k)).
     """
-    # Step 2 — query-side dynamic pruning.
-    if config.prune_side in ("query", "both"):
-        pr = pruning.prune_topp(q_emb, q_salience, q_mask, p=config.p)
-        q_emb, q_mask = pr.embeddings, pr.mask
-
-    # Steps 3-4 — quantize/encode + similarity search.
-    n_cand = k if config.rerank == 0 else max(k, config.rerank)
-    if config.mode == "float":
-        scores, ids = index_mod.search_float_flat(
-            index.float_flat, q_emb, q_mask, k=n_cand)
-    elif config.mode == "binary":
-        q_codes = quant.quantize(q_emb, index.codebook, code_dtype=jnp.uint16)
-        scores, ids = index_mod.search_hamming(
-            index.hamming, q_codes, q_mask, bits=config.bits, k=n_cand)
-    elif config.index == "ivf":
-        scores, ids = index_mod.search_ivf(
-            index.ivf, q_emb, q_mask, n_probe=config.ivf.n_probe, k=n_cand)
-    else:
-        scores, ids = index_mod.search_flat(index.flat, q_emb, q_mask, k=n_cand)
-
-    # Step 5 — rerank candidates with unpruned quantized late interaction.
-    if config.rerank and config.mode != "float":
-        cand_codes = index.rerank_codes[ids]                  # (B, r, Md)
-        cand_mask = index.rerank_mask[ids]
-        def rerank_one(qi, qmi, codes, msk):
-            return li.quantized_maxsim(qi[None], qmi[None], codes, msk,
-                                       index.codebook)[0]
-        re_scores = jax.vmap(rerank_one)(q_emb, q_mask, cand_codes, cand_mask)
-        re_scores = jnp.where(ids >= 0, re_scores, li.NEG_INF)
-        top_s, top_i = jax.lax.top_k(re_scores, k)
-        return top_s, jnp.take_along_axis(ids, top_i, axis=1)
-    return scores[:, :k], ids[:, :k]
+    return Retriever(config).search(index, Query(q_emb, q_mask, q_salience),
+                                    k=k)
 
 
 def storage_bytes(index: HPCIndex, config: HPCConfig) -> dict:
-    """Measured storage footprint of the built index (paper Table III).
-
-    Counts the patch representation payload (the paper's metric); masks/ids
-    are reported separately.
-    """
-    out = {}
-    if config.mode == "float":
-        e = index.float_flat.embeddings
-        out["payload"] = e.size * e.dtype.itemsize
-    elif config.mode == "binary":
-        n_codes = int(index.hamming.codes.size)
-        out["payload"] = binary_mod.packed_nbytes(n_codes, config.bits)
-        out["codebook"] = index.codebook.size * index.codebook.dtype.itemsize
-    else:
-        src = index.flat if index.flat is not None else None
-        if src is not None:
-            codes = src.codes
-        elif index.ivf is not None:
-            codes = index.ivf.bucket_codes
-        else:
-            codes = index.rerank_codes
-        out["payload"] = codes.size * codes.dtype.itemsize
-        out["codebook"] = index.codebook.size * index.codebook.dtype.itemsize
-    return out
+    """Measured storage footprint of the built index (paper Table III)."""
+    return Retriever(config).storage_bytes(index)

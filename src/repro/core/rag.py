@@ -28,6 +28,8 @@ import numpy as np
 
 from repro.core import pipeline as hpc
 from repro.models import transformer as T
+from repro.retrieval.base import Query as RQuery
+from repro.retrieval.retriever import Retriever
 
 Array = jax.Array
 
@@ -123,8 +125,9 @@ def rag_pipeline(index: "hpc.HPCIndex", gen_params, corpus, rag_cfg: RAGConfig,
     gold_facts = np.asarray(corpus.gold_facts[queries_slice])
 
     t0 = time.perf_counter()
-    _, ids = hpc.query(index, q_emb, q_mask, q_sal, rag_cfg.retriever,
-                       k=rag_cfg.top_k_docs)
+    retriever = Retriever(rag_cfg.retriever)
+    _, ids = retriever.search(index, RQuery(q_emb, q_mask, q_sal),
+                              k=rag_cfg.top_k_docs)
     ids = jnp.maximum(ids, 0)
     t_retrieve = time.perf_counter() - t0
 

@@ -1,0 +1,11 @@
+"""Distribution layer: logical-axis sharding rules + collective helpers.
+
+`sharding.py` maps *logical* axis names ("batch", "mlp", "corpus", ...)
+onto physical mesh axes ("pod", "data", "model") with divisibility and
+conflict fallbacks, so model code never hardcodes a mesh topology.
+`collectives.py` holds hand-rolled collective schedules (ring all-gather
+matmul) used where XLA's default SPMD partitioning is not the schedule we
+want.
+"""
+
+from repro.dist import collectives, sharding  # noqa: F401

@@ -1,0 +1,166 @@
+"""Logical-axis sharding: resolve logical dim names to mesh PartitionSpecs.
+
+Model code annotates every tensor dim with a *logical* name ("batch",
+"mlp", "corpus", ...). `DEFAULT_RULES` maps each logical name to an
+ordered tuple of *physical* mesh axes it may shard over. `Sharder.resolve`
+turns a logical spec + concrete shape into a `PartitionSpec` with three
+fallbacks, applied per dim in order:
+
+  1. missing axes — rule axes not present in the mesh are skipped silently
+     (the same model code runs on a 1-pod ("data","model") mesh and a
+     multi-pod ("pod","data","model") mesh);
+  2. conflicts — a mesh axis already claimed by an earlier dim of the same
+     tensor is dropped (a tensor cannot use one mesh axis twice);
+  3. divisibility — axes are dropped from the *right* of the rule until the
+     dim size divides the product of the remaining axis sizes (never
+     produce an uneven shard; replicate instead).
+
+The resolver is pure shape arithmetic: it needs axis *sizes* only, so it
+works under `jax.eval_shape` and on fake meshes in tests.
+
+`NULL` is the no-mesh singleton: `shd=NULL` turns every constraint into a
+no-op so the same model code runs unsharded (single device, unit tests).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical dim name -> ordered mesh axes it may shard over. Order matters:
+# divisibility drops from the right, so put the "most essential" axis first.
+# Only axes that exist in the production meshes may appear here
+# (tests/test_sharding.py pins the set to {"pod", "data", "model"}).
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    # data-parallel-ish dims
+    "batch": ("pod", "data"),
+    "nodes": ("pod", "data"),
+    "edge": ("pod", "data"),
+    "tokens": ("pod", "data"),
+    # fan-out dims that may take the whole mesh
+    "candidate": ("pod", "data", "model"),
+    "corpus": ("pod", "data", "model"),
+    # tensor-parallel dims
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "qkv_out": ("model",),
+    "kv_out": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "seq_sp": ("model",),
+    "expert": ("model",),
+    "table_rows": ("model",),
+    # contracting / replicated dims
+    "embed": (),
+    "expert_mlp": (),
+    "kv_seq": (),
+}
+
+
+def is_logical_spec(x) -> bool:
+    """True for a plain tuple of logical dim names (str) / None.
+
+    NamedTuple pytree nodes (whose fields are themselves specs) and tuples
+    holding non-str entries are *not* logical specs — this is the `is_leaf`
+    predicate used when tree-mapping spec trees against parameter trees.
+    """
+    return (type(x) is tuple
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+class Sharder:
+    """Resolves logical specs against one concrete mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Tuple[str, ...]]]
+                 = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES if rules is None else rules)
+        self._sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    # -- core resolution ----------------------------------------------------
+
+    def _axes_for(self, name: Optional[str], dim: int, used: set
+                  ) -> Tuple[Tuple[str, ...], int]:
+        """Mesh axes a single dim shards over, after all three fallbacks.
+
+        Returns (kept_axes, n_present) where n_present is the number of
+        rule axes that exist in this mesh (it decides the spec entry form:
+        a bare string for single-axis rules, a tuple for multi-axis ones).
+        """
+        if name is None:
+            return (), 0
+        rule = self.rules.get(name, ())
+        present = tuple(a for a in rule if a in self._sizes)
+        kept = [a for a in present if a not in used]
+        # drop from the right until the dim divides the shard product
+        while kept:
+            prod = 1
+            for a in kept:
+                prod *= self._sizes[a]
+            if dim % prod == 0:
+                break
+            kept.pop()
+        return tuple(kept), len(present)
+
+    def resolve(self, spec: Tuple[Optional[str], ...],
+                shape: Tuple[int, ...]) -> P:
+        """Logical spec + shape -> PartitionSpec on this mesh."""
+        assert len(spec) == len(shape), (spec, shape)
+        used: set = set()
+        entries = []
+        for name, dim in zip(spec, shape):
+            kept, n_present = self._axes_for(name, dim, used)
+            used.update(kept)
+            if not kept:
+                entries.append(None)
+            elif n_present == 1:
+                entries.append(kept[0])
+            else:
+                entries.append(kept)
+        return P(*entries)
+
+    # -- conveniences -------------------------------------------------------
+
+    def named(self, spec: Tuple[Optional[str], ...],
+              shape: Tuple[int, ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(spec, shape))
+
+    def constraint(self, x: jax.Array, *spec: Optional[str]) -> jax.Array:
+        """with_sharding_constraint under the resolved spec (jit-side)."""
+        return jax.lax.with_sharding_constraint(
+            x, self.named(tuple(spec), x.shape))
+
+    def num_shards(self, name: str, dim: int) -> int:
+        """How many ways a dim of this size/logical name actually shards."""
+        kept, _ = self._axes_for(name, dim, set())
+        prod = 1
+        for a in kept:
+            prod *= self._sizes[a]
+        return prod
+
+
+class _NullSharder:
+    """Mesh-less stand-in: every operation is the identity / replicated.
+
+    The default `shd=NULL` argument of model code — lets the exact same
+    forward functions run unsharded in unit tests and on one device.
+    """
+
+    mesh = None
+    rules: Dict[str, Tuple[str, ...]] = {}
+
+    def resolve(self, spec, shape) -> P:
+        return P(*([None] * len(spec)))
+
+    def named(self, spec, shape):
+        raise ValueError("NULL sharder has no mesh — use a real Sharder")
+
+    def constraint(self, x, *spec):
+        return x
+
+    def num_shards(self, name, dim) -> int:
+        return 1
+
+
+NULL = _NullSharder()

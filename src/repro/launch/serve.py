@@ -2,7 +2,10 @@
 corpus and serve batched queries through the continuous-batching server.
 
   PYTHONPATH=src python -m repro.launch.serve --n-docs 4096 --queries 256 \
-      --mode quantized --k 256 --p 60
+      --backend flat --k 256 --p 60
+
+`--backend` names a registry backend (float_flat / flat / ivf / hamming);
+the deprecated `--mode`/`--index` pair is still accepted.
 """
 from __future__ import annotations
 
@@ -10,12 +13,12 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pipeline as hpc
 from repro.core.index import IVFConfig
 from repro.data import synthetic
+from repro.retrieval import (Corpus, HPCConfig, Query, Retriever,
+                             available_backends)
 from repro.serving.server import RetrievalServer, ServeConfig
 
 
@@ -23,9 +26,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-docs", type=int, default=4096)
     ap.add_argument("--queries", type=int, default=256)
-    ap.add_argument("--mode", default="quantized",
-                    choices=["float", "quantized", "binary"])
-    ap.add_argument("--index", default="flat", choices=["flat", "ivf"])
+    ap.add_argument("--backend", default=None,
+                    choices=list(available_backends()),
+                    help="index backend (wins over --mode/--index)")
+    ap.add_argument("--mode", default=None,
+                    choices=["float", "quantized", "binary"],
+                    help="deprecated: use --backend")
+    ap.add_argument("--index", default=None, choices=["flat", "ivf"],
+                    help="deprecated: use --backend")
     ap.add_argument("--k", type=int, default=256)
     ap.add_argument("--p", type=float, default=60.0)
     ap.add_argument("--top-k", type=int, default=10)
@@ -36,27 +44,31 @@ def main(argv=None):
     spec = synthetic.CorpusSpec(n_docs=args.n_docs, n_queries=args.queries)
     data = synthetic.make_retrieval_corpus(key, spec)
 
-    cfg = hpc.HPCConfig(k=args.k, p=args.p, mode=args.mode, index=args.index,
-                        prune_side="doc", rerank=32,
-                        ivf=IVFConfig(n_list=64, n_probe=8))
-    t0 = time.perf_counter()
-    index = hpc.build_index(key, data.doc_patches, data.doc_mask,
-                            data.doc_salience, cfg)
-    jax.block_until_ready(index.codebook)
-    print(f"index built in {time.perf_counter()-t0:.2f}s | "
-          f"storage {hpc.storage_bytes(index, cfg)}")
+    backend = args.backend
+    if backend is None and args.mode is None and args.index is None:
+        backend = "flat"
+    cfg = HPCConfig(k=args.k, p=args.p, backend=backend, mode=args.mode,
+                    index=args.index, prune_side="doc", rerank=32,
+                    ivf=IVFConfig(n_list=64, n_probe=8))
+    retriever = Retriever(cfg)
 
-    mq = data.query_patches.shape[1]
+    t0 = time.perf_counter()
+    state = retriever.build(key, Corpus(data.doc_patches, data.doc_mask,
+                                        data.doc_salience))
+    jax.block_until_ready(state.codebook)
+    print(f"index[{cfg.backend}] built in {time.perf_counter()-t0:.2f}s | "
+          f"storage {retriever.storage_bytes(state)}")
 
     @jax.jit
     def search(q, qm, qs):
-        return hpc.query(index, q, qm, qs, cfg, k=args.top_k)
+        return retriever.search(state, Query(q, qm, qs), k=args.top_k)
 
     server = RetrievalServer(search, ServeConfig(max_batch=args.max_batch,
                                                  top_k=args.top_k))
-    # warmup compile
+    # warmup compile (excluded from the serving-window stats)
     server.query(data.query_patches[0], data.query_mask[0],
                  data.query_salience[0])
+    server.reset_stats()
 
     hits = 0
     t0 = time.perf_counter()
@@ -73,7 +85,7 @@ def main(argv=None):
     wall = time.perf_counter() - t0
     st = server.stats()
     print(f"served {args.queries} queries in {wall:.2f}s "
-          f"({args.queries/wall:.1f} QPS) | hit@{args.top_k} "
+          f"({st['qps']:.1f} QPS) | hit@{args.top_k} "
           f"{hits/args.queries:.3f} | p50 {st['p50_ms']:.1f}ms "
           f"p99 {st['p99_ms']:.1f}ms | mean batch {st['mean_batch']:.1f}")
     server.close()

@@ -1,0 +1,32 @@
+"""Retriever API v1: pluggable index backends behind a string registry.
+
+    from repro.retrieval import Retriever, Corpus, Query, HPCConfig
+
+    r = Retriever(HPCConfig(k=256, p=60.0, backend="flat", rerank=32))
+    state = r.build(key, Corpus(doc_emb, doc_mask, doc_salience))
+    scores, ids = r.search(state, Query(q_emb, q_mask, q_salience), k=10)
+
+Built-in backends (one module each — the template for new ones):
+  float_flat — uncompressed exhaustive MaxSim (ColPali-Full baseline)
+  flat       — exhaustive fused ADC scan over quantized codes
+  ivf        — centroid routing over padded-dense buckets
+  hamming    — binary codes + popcount scan
+
+See docs/api.md for the `IndexBackend` contract.
+"""
+
+from repro.retrieval.base import (  # noqa: F401
+    Corpus,
+    IndexBackend,
+    Query,
+    RetrieverState,
+    available_backends,
+    code_dtype,
+    get_backend,
+    register_backend,
+)
+from repro.retrieval.config import HPCConfig  # noqa: F401
+from repro.retrieval.retriever import Retriever  # noqa: F401
+
+# importing the backend modules installs them in the registry
+from repro.retrieval import flat, float_flat, hamming, ivf  # noqa: E402,F401

@@ -1,0 +1,294 @@
+"""Retriever API v1: the `IndexBackend` contract + string-keyed registry.
+
+A backend owns ONE primary search structure (exhaustive flat scan, IVF
+routing, Hamming scan, ...) behind four methods over pytree state:
+
+    build(key, corpus, cfg)    -> RetrieverState
+    search(state, query, *, k) -> (scores (B, k), doc_ids (B, k))
+    storage_bytes(state)       -> {"payload": ..., ...}
+    save(path, state) / load(path) -> RetrieverState
+
+plus `shard_specs(state)` (logical-axis specs so the corpus dimension
+shards over the mesh — see repro/dist/sharding.py). Everything shared
+between backends — codebook training, corpus quantization, doc/query-side
+pruning, candidate rerank — lives in the `Retriever` facade
+(retriever.py) or in the helpers below, so a new backend is one file:
+
+    @register_backend("my_index")
+    class MyBackend(IndexBackend):
+        def build(self, key, corpus, cfg): ...
+        def search(self, state, query, *, k): ...
+        def storage_bytes(self, state): ...
+
+See docs/api.md for the full contract.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as index_mod
+from repro.core import pruning
+from repro.core import quantization as quant
+from repro.retrieval.config import HPCConfig
+
+Array = jax.Array
+
+
+def code_dtype(k: int):
+    """Dtype of centroid-index codes for a K-entry codebook.
+
+    The single source of truth for code width: build AND query sides must
+    agree (v0 quantized queries to uint16 while building uint8 corpora).
+    """
+    return jnp.uint8 if k <= 256 else jnp.uint16
+
+
+# ---------------------------------------------------------------------------
+# Data carriers (all pytrees)
+# ---------------------------------------------------------------------------
+
+class Corpus(NamedTuple):
+    """Doc-side inputs: (N, Md, D) embeddings, (N, Md) mask/salience."""
+    embeddings: Array
+    mask: Array
+    salience: Array
+
+
+class Query(NamedTuple):
+    """Query-side inputs: (B, Mq, D) embeddings, (B, Mq) mask/salience."""
+    embeddings: Array
+    mask: Array
+    salience: Array
+
+
+class RetrieverState(NamedTuple):
+    """Built index state (a pytree — shardable/checkpointable).
+
+    `backend_state` is the single tagged backend structure (the tag is its
+    Python type — FlatIndex, IVFState, HammingState, FloatFlatIndex), which
+    replaces v0's four-way Optional union. `rerank_codes`/`rerank_mask`
+    hold the unpruned quantized corpus for the facade's rerank stage.
+    """
+
+    codebook: Array
+    backend_state: Any
+    rerank_codes: Array
+    rerank_mask: Array
+
+    # v0 `HPCIndex` compatibility accessors -------------------------------
+    @property
+    def flat(self) -> Optional[index_mod.FlatIndex]:
+        s = self.backend_state
+        return s if isinstance(s, index_mod.FlatIndex) else None
+
+    @property
+    def float_flat(self) -> Optional[index_mod.FloatFlatIndex]:
+        s = self.backend_state
+        return s if isinstance(s, index_mod.FloatFlatIndex) else None
+
+    @property
+    def ivf(self) -> Optional[index_mod.IVFIndex]:
+        from repro.retrieval.ivf import IVFState
+        s = self.backend_state
+        return s.index if isinstance(s, IVFState) else None
+
+    @property
+    def hamming(self) -> Optional[index_mod.HammingIndex]:
+        from repro.retrieval.hamming import HammingState
+        s = self.backend_state
+        return s.index if isinstance(s, HammingState) else None
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, "IndexBackend"] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: `@register_backend("flat")` installs a singleton."""
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls()
+        return cls
+    return deco
+
+
+def _ensure_builtin_backends():
+    """Install the built-in backends (idempotent, import-cycle safe).
+
+    Registration normally happens when `repro.retrieval` initialises; this
+    lazy hook covers callers that imported only a submodule (e.g. the
+    `repro.core.pipeline` compat shim during `repro.core` package init).
+    """
+    from repro.retrieval import flat, float_flat, hamming, ivf  # noqa: F401
+
+
+def get_backend(name: str) -> "IndexBackend":
+    if name not in _REGISTRY:
+        _ensure_builtin_backends()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown index backend {name!r}; available: "
+            f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def available_backends() -> Tuple[str, ...]:
+    _ensure_builtin_backends()
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Shared build stages (identical numerics to the v0 pipeline)
+# ---------------------------------------------------------------------------
+
+def fit_codebook(key: Array, corpus: Corpus, cfg: HPCConfig) -> Array:
+    """Train the K-Means codebook on valid patches only.
+
+    Invalid rows are replaced by resampled valid rows so Lloyd sees real
+    data (zero vectors would otherwise form their own cluster).
+    """
+    d = corpus.embeddings.shape[-1]
+    flat = corpus.embeddings.reshape(-1, d)
+    flat_mask = corpus.mask.reshape(-1)
+    valid_idx = jnp.argsort(~flat_mask, stable=True)  # valid rows first
+    n_valid = jnp.sum(flat_mask)
+    gather_idx = jnp.where(
+        jnp.arange(flat.shape[0]) < n_valid,
+        valid_idx,
+        valid_idx[jnp.mod(jnp.arange(flat.shape[0]),
+                          jnp.maximum(n_valid, 1))])
+    train_x = flat[gather_idx]
+    codebook, _ = quant.kmeans_fit(
+        key, train_x, quant.KMeansConfig(k=cfg.k, iters=cfg.kmeans_iters))
+    return codebook
+
+
+def encode_corpus(key: Array, corpus: Corpus, cfg: HPCConfig
+                  ) -> Tuple[Array, Array, Array, Array, Array]:
+    """Shared offline stages for all code-based backends.
+
+    Splits the key exactly like v0 `build_index` (codebook key first, the
+    remainder free for the backend's own structure, e.g. IVF routing),
+    trains the codebook, quantizes the full corpus (the rerank structure),
+    and applies doc-side pruning for the primary structure.
+
+    Returns (struct_key, codebook, codes_full, codes, mask).
+    """
+    k_cb, k_struct = jax.random.split(key)
+    codebook = fit_codebook(k_cb, corpus, cfg)
+    codes_full = quant.quantize(corpus.embeddings, codebook,
+                                code_dtype=code_dtype(cfg.k))       # (N, Md)
+    if cfg.prune_side in ("doc", "both"):
+        codes, _, mask, _ = pruning.prune_topp_codes(
+            codes_full, corpus.salience, corpus.mask, p=cfg.p)
+    else:
+        codes, mask = codes_full, corpus.mask
+    return k_struct, codebook, codes_full, codes, mask
+
+
+# ---------------------------------------------------------------------------
+# Backend base class
+# ---------------------------------------------------------------------------
+
+class IndexBackend:
+    """Contract every index backend implements (see module docstring)."""
+
+    name: str = "?"
+    # True -> the backend's scores are exact late-interaction scores over
+    # raw embeddings; the facade skips the quantized rerank stage.
+    exact_scores: bool = False
+
+    # -- required -----------------------------------------------------------
+
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig
+              ) -> RetrieverState:
+        raise NotImplementedError
+
+    def search(self, state: RetrieverState, query: Query, *, k: int
+               ) -> Tuple[Array, Array]:
+        raise NotImplementedError
+
+    def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
+        raise NotImplementedError
+
+    # -- sharding -----------------------------------------------------------
+
+    def shard_specs(self, state: RetrieverState):
+        """Logical-axis spec tree matching `state` (same treedef).
+
+        Default: shard dim 0 of every backend-state array over the
+        "corpus" logical axis (documents/buckets over the mesh), keep the
+        codebook replicated, shard the rerank corpus over "corpus" too.
+        Backends with non-corpus leading dims override this.
+        """
+        def leaf_spec(leaf):
+            nd = jnp.ndim(leaf)
+            return ("corpus",) + (None,) * (nd - 1) if nd else ()
+        backend_specs = jax.tree.map(leaf_spec, state.backend_state)
+        return RetrieverState(
+            codebook=(None, None),
+            backend_state=backend_specs,
+            rerank_codes=("corpus", None),
+            rerank_mask=("corpus", None))
+
+    # -- persistence --------------------------------------------------------
+    #
+    # One flat .npz: ordered array leaves + the backend name + an optional
+    # static-aux scalar (IVF n_probe, Hamming bits). The treedef is NEVER
+    # serialized — it is reconstructed from `state_template`, so loading an
+    # untrusted index file deserializes arrays only (no pickle, no code).
+
+    def _state_aux(self, state: RetrieverState):
+        """Static aux carried by the backend state (None if stateless)."""
+        return None
+
+    def state_template(self, aux) -> RetrieverState:
+        """Dummy-leaf state with this backend's exact pytree structure.
+
+        Backends with custom state must override this (or save/load)."""
+        raise NotImplementedError(
+            f"backend {self.name!r} must define state_template (or override "
+            "save/load) for persistence")
+
+    def save(self, path: str, state: RetrieverState) -> str:
+        aux = self._state_aux(state)
+        leaves, treedef = jax.tree_util.tree_flatten(state)
+        template_def = jax.tree_util.tree_structure(self.state_template(aux))
+        if treedef != template_def:
+            raise NotImplementedError(
+                f"backend {self.name!r}: state structure {treedef} does not "
+                f"match state_template {template_def}; override save/load")
+        payload = {f"leaf_{i:04d}": np.asarray(leaf)
+                   for i, leaf in enumerate(leaves)}
+        payload["backend"] = np.array(self.name)
+        if aux is not None:
+            payload["aux"] = np.asarray(aux, np.int64)
+        if not path.endswith(".npz"):
+            path = path + ".npz"
+        np.savez(path, **payload)
+        return path
+
+    def load(self, path: str) -> RetrieverState:
+        if not path.endswith(".npz"):
+            path = path + ".npz"
+        with np.load(path, allow_pickle=False) as z:
+            saved = str(z["backend"])
+            if saved != self.name:
+                raise ValueError(
+                    f"index was saved by backend {saved!r}, not {self.name!r}")
+            aux = int(z["aux"]) if "aux" in z.files else None
+            names = sorted(n for n in z.files if n.startswith("leaf_"))
+            leaves = [jnp.asarray(z[n]) for n in names]
+        treedef = jax.tree_util.tree_structure(self.state_template(aux))
+        if treedef.num_leaves != len(leaves):
+            raise ValueError(
+                f"index file has {len(leaves)} arrays, backend {self.name!r} "
+                f"expects {treedef.num_leaves}")
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,79 @@
+"""HPC-ColPali configuration (paper §III) + backend selection.
+
+`HPCConfig.backend` names the index backend ("float_flat", "flat", "ivf",
+"hamming") resolved through the `repro.retrieval` registry. The v0 knobs
+`mode`/`index` are still accepted as a deprecated alias pair and are kept
+populated on the config (derived from `backend`) so old readers keep
+working; new code should pass `backend=` only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Literal, Optional
+
+from repro.core import binary as binary_mod
+from repro.core.index import IVFConfig
+
+# (mode, index) -> backend name; the old union dispatch, now a table.
+_MODE_INDEX_TO_BACKEND = {
+    ("float", "flat"): "float_flat",
+    ("float", "ivf"): "float_flat",      # v0 ignored `index` for float
+    ("quantized", "flat"): "flat",
+    ("quantized", "ivf"): "ivf",
+    ("binary", "flat"): "hamming",       # v0 ignored `index` for binary
+    ("binary", "ivf"): "hamming",
+}
+# backend name -> canonical (mode, index) for old readers.
+_BACKEND_TO_MODE_INDEX = {
+    "float_flat": ("float", "flat"),
+    "flat": ("quantized", "flat"),
+    "ivf": ("quantized", "ivf"),
+    "hamming": ("binary", "flat"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HPCConfig:
+    """Tunable knobs of HPC-ColPali (paper §III).
+
+    Exactly one primary search structure is selected by `backend`; `mode`
+    and `index` are the deprecated v0 spelling (kept as derived aliases).
+    """
+
+    k: int = 256                     # codebook size (128/256/512)
+    p: float = 60.0                  # top-p% patches kept
+    prune_side: Literal["doc", "query", "both", "none"] = "doc"
+    mode: Optional[Literal["float", "quantized", "binary"]] = None
+    index: Optional[Literal["flat", "ivf"]] = None
+    ivf: IVFConfig = dataclasses.field(default_factory=IVFConfig)
+    kmeans_iters: int = 25
+    rerank: int = 0                  # rerank top-r candidates with unpruned
+                                     # quantized maxsim (0 = off)
+    backend: Optional[str] = None    # registry key; wins over mode/index
+
+    def __post_init__(self):
+        if self.backend is None:
+            mode = self.mode if self.mode is not None else "quantized"
+            index = self.index if self.index is not None else "flat"
+            if self.mode is not None or self.index is not None:
+                warnings.warn(
+                    "HPCConfig(mode=..., index=...) is deprecated; pass "
+                    f"backend={_MODE_INDEX_TO_BACKEND[(mode, index)]!r}",
+                    DeprecationWarning, stacklevel=3)
+            object.__setattr__(
+                self, "backend", _MODE_INDEX_TO_BACKEND[(mode, index)])
+        elif self.backend not in _BACKEND_TO_MODE_INDEX:
+            # unknown names are allowed for out-of-tree backends, but then
+            # the mode/index aliases cannot be derived — leave as given.
+            if self.mode is None or self.index is None:
+                object.__setattr__(self, "mode", self.mode or "quantized")
+                object.__setattr__(self, "index", self.index or "flat")
+            return
+        mode, index = _BACKEND_TO_MODE_INDEX[self.backend]
+        object.__setattr__(self, "mode", mode)
+        object.__setattr__(self, "index", index)
+
+    @property
+    def bits(self) -> int:
+        return binary_mod.bits_for_k(self.k)

@@ -1,0 +1,51 @@
+"""`flat` backend: exhaustive fused ADC MaxSim scan over quantized codes.
+
+The paper's main configuration (quantized + flat): one MXU-friendly pass
+over the (pruned) code corpus per query batch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+
+from repro.core import index as index_mod
+from repro.retrieval.base import (Corpus, IndexBackend, Query,
+                                  RetrieverState, encode_corpus,
+                                  register_backend)
+from repro.retrieval.config import HPCConfig
+
+Array = jax.Array
+
+
+@register_backend("flat")
+class FlatBackend(IndexBackend):
+
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig
+              ) -> RetrieverState:
+        _, codebook, codes_full, codes, mask = encode_corpus(key, corpus, cfg)
+        return RetrieverState(
+            codebook=codebook,
+            backend_state=index_mod.build_flat(codes, mask, codebook),
+            rerank_codes=codes_full,
+            rerank_mask=corpus.mask)
+
+    def search(self, state: RetrieverState, query: Query, *, k: int
+               ) -> Tuple[Array, Array]:
+        return index_mod.search_flat(
+            state.backend_state, query.embeddings, query.mask, k=k)
+
+    def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
+        codes = state.backend_state.codes
+        cb = state.codebook
+        return {"payload": codes.size * codes.dtype.itemsize,
+                "codebook": cb.size * cb.dtype.itemsize}
+
+    def state_template(self, aux) -> RetrieverState:
+        return RetrieverState(0, index_mod.FlatIndex(0, 0, 0, 0), 0, 0)
+
+    def shard_specs(self, state: RetrieverState):
+        specs = super().shard_specs(state)
+        # the FlatIndex carries its own codebook copy — replicate it
+        return specs._replace(
+            backend_state=specs.backend_state._replace(codebook=(None, None)))

@@ -1,0 +1,49 @@
+"""`float_flat` backend: uncompressed exhaustive MaxSim (ColPali-Full).
+
+The paper's fp32 baseline — no codebook, no rerank (its scores are already
+exact late-interaction scores).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import index as index_mod
+from repro.core import pruning
+from repro.retrieval.base import (Corpus, IndexBackend, Query,
+                                  RetrieverState, register_backend)
+from repro.retrieval.config import HPCConfig
+
+Array = jax.Array
+
+
+@register_backend("float_flat")
+class FloatFlatBackend(IndexBackend):
+    exact_scores = True
+
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig
+              ) -> RetrieverState:
+        n, _, d = corpus.embeddings.shape
+        emb, mask = corpus.embeddings, corpus.mask
+        if cfg.prune_side in ("doc", "both"):
+            pr = pruning.prune_topp(emb, corpus.salience, mask, p=cfg.p)
+            emb, mask = pr.embeddings, pr.mask
+        return RetrieverState(
+            codebook=jnp.zeros((1, d), corpus.embeddings.dtype),
+            backend_state=index_mod.build_float_flat(emb, mask),
+            rerank_codes=jnp.zeros((n, 1), jnp.uint8),
+            rerank_mask=jnp.zeros((n, 1), bool))
+
+    def search(self, state: RetrieverState, query: Query, *, k: int
+               ) -> Tuple[Array, Array]:
+        return index_mod.search_float_flat(
+            state.backend_state, query.embeddings, query.mask, k=k)
+
+    def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
+        e = state.backend_state.embeddings
+        return {"payload": e.size * e.dtype.itemsize}
+
+    def state_template(self, aux) -> RetrieverState:
+        return RetrieverState(0, index_mod.FloatFlatIndex(0, 0, 0), 0, 0)

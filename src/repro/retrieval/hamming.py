@@ -1,0 +1,74 @@
+"""`hamming` backend: binary codes + VPU popcount MaxSim (paper §III-D).
+
+Queries are quantized to centroid indices with the SAME code dtype the
+corpus was built with (`code_dtype(k)` — v0 inconsistently used uint16
+for queries vs uint8 corpora). The bit width is static aux data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+
+from repro.core import binary as binary_mod
+from repro.core import index as index_mod
+from repro.core import quantization as quant
+from repro.retrieval.base import (Corpus, IndexBackend, Query,
+                                  RetrieverState, code_dtype, encode_corpus,
+                                  register_backend)
+from repro.retrieval.config import HPCConfig
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HammingState:
+    """HammingIndex + the static bit width (aux data, not a leaf)."""
+
+    index: index_mod.HammingIndex
+    bits: int
+
+    def tree_flatten(self):
+        return (self.index,), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+@register_backend("hamming")
+class HammingBackend(IndexBackend):
+
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig
+              ) -> RetrieverState:
+        _, codebook, codes_full, codes, mask = encode_corpus(key, corpus, cfg)
+        ham = index_mod.build_hamming(codes, mask, cfg.bits)
+        return RetrieverState(
+            codebook=codebook,
+            backend_state=HammingState(ham, cfg.bits),
+            rerank_codes=codes_full,
+            rerank_mask=corpus.mask)
+
+    def search(self, state: RetrieverState, query: Query, *, k: int
+               ) -> Tuple[Array, Array]:
+        s = state.backend_state
+        q_codes = quant.quantize(query.embeddings, state.codebook,
+                                 code_dtype=code_dtype(1 << s.bits))
+        return index_mod.search_hamming(s.index, q_codes, query.mask,
+                                        bits=s.bits, k=k)
+
+    def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
+        s = state.backend_state
+        n_codes = int(s.index.codes.size)
+        cb = state.codebook
+        return {"payload": binary_mod.packed_nbytes(n_codes, s.bits),
+                "codebook": cb.size * cb.dtype.itemsize}
+
+    def _state_aux(self, state: RetrieverState):
+        return state.backend_state.bits
+
+    def state_template(self, aux) -> RetrieverState:
+        return RetrieverState(
+            0, HammingState(index_mod.HammingIndex(0, 0, 0, 0), aux), 0, 0)

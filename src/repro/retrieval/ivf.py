@@ -1,0 +1,89 @@
+"""`ivf` backend: centroid routing over padded-dense buckets.
+
+The TPU analogue of FAISS IVF/HNSW (core/index.py): documents bucket by
+the routing cluster of their mean decoded patch; a query scores the
+routing centroids with one matmul and fused-scans only `n_probe` buckets.
+`n_probe` is a *static* search knob, carried as pytree aux data so
+`search(state, query, k=...)` stays self-contained and jit-stable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+
+from repro.core import index as index_mod
+from repro.retrieval.base import (Corpus, IndexBackend, Query,
+                                  RetrieverState, encode_corpus,
+                                  register_backend)
+from repro.retrieval.config import HPCConfig
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class IVFState:
+    """IVFIndex + the static n_probe search knob (aux data, not a leaf)."""
+
+    index: index_mod.IVFIndex
+    n_probe: int
+
+    def tree_flatten(self):
+        return (self.index,), self.n_probe
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+@register_backend("ivf")
+class IVFBackend(IndexBackend):
+
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig
+              ) -> RetrieverState:
+        k_ivf, codebook, codes_full, codes, mask = encode_corpus(
+            key, corpus, cfg)
+        ivf = index_mod.build_ivf(k_ivf, codes, mask, codebook, cfg.ivf)
+        return RetrieverState(
+            codebook=codebook,
+            backend_state=IVFState(ivf, cfg.ivf.n_probe),
+            rerank_codes=codes_full,
+            rerank_mask=corpus.mask)
+
+    def search(self, state: RetrieverState, query: Query, *, k: int
+               ) -> Tuple[Array, Array]:
+        s = state.backend_state
+        return index_mod.search_ivf(s.index, query.embeddings, query.mask,
+                                    n_probe=s.n_probe, k=k)
+
+    def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
+        codes = state.backend_state.index.bucket_codes
+        cb = state.codebook
+        return {"payload": codes.size * codes.dtype.itemsize,
+                "codebook": cb.size * cb.dtype.itemsize}
+
+    def _state_aux(self, state: RetrieverState):
+        return state.backend_state.n_probe
+
+    def state_template(self, aux) -> RetrieverState:
+        return RetrieverState(
+            0, IVFState(index_mod.IVFIndex(0, 0, 0, 0, 0, 0), aux), 0, 0)
+
+    def shard_specs(self, state: RetrieverState):
+        ivf = state.backend_state.index
+        # buckets (dim 0 = n_list) spread over the corpus axes; routing
+        # centroids + codebook replicated (every query scores all of them)
+        ivf_specs = index_mod.IVFIndex(
+            routing_centroids=(None, None),
+            bucket_codes=("corpus", None, None),
+            bucket_mask=("corpus", None, None),
+            bucket_valid=("corpus", None),
+            bucket_doc_ids=("corpus", None),
+            codebook=(None, None))
+        return RetrieverState(
+            codebook=(None, None),
+            backend_state=IVFState(ivf_specs, state.backend_state.n_probe),
+            rerank_codes=("corpus", None),
+            rerank_mask=("corpus", None))

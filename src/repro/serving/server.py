@@ -47,12 +47,22 @@ class RetrievalServer:
         self._stop = threading.Event()
         self.latencies_ms: List[float] = []
         self.batch_sizes: List[int] = []
+        # wall-clock span of the serving window: first enqueue -> last
+        # completion. qps must be requests / span, NOT requests / sum of
+        # per-request latencies (overlapping requests would make the sum
+        # exceed the wall clock and wildly underestimate throughput).
+        self._lock = threading.Lock()
+        self._t_first_enqueue: Optional[float] = None
+        self._t_last_done: Optional[float] = None
         self._thread = threading.Thread(target=self._dispatch, daemon=True)
         self._thread.start()
 
     def submit(self, q_emb, q_mask, q_sal) -> _Request:
         req = _Request(np.asarray(q_emb), np.asarray(q_mask),
                        np.asarray(q_sal))
+        with self._lock:
+            if self._t_first_enqueue is None:
+                self._t_first_enqueue = req.t_enqueue
         self._q.put(req)
         return req
 
@@ -96,22 +106,46 @@ class RetrievalServer:
         scores, ids = np.asarray(scores), np.asarray(ids)
         now = time.perf_counter()
         self.batch_sizes.append(len(batch))
+        with self._lock:
+            self._t_last_done = now
+            if self._t_first_enqueue is None:
+                # reset_stats() ran while this batch was in flight: restart
+                # the window at this batch's earliest enqueue so the
+                # span/latency invariant holds
+                self._t_first_enqueue = min(r.t_enqueue for r in batch)
         for i, r in enumerate(batch):
             r.result = (scores[i], ids[i])
             self.latencies_ms.append((now - r.t_enqueue) * 1e3)
             r.event.set()
 
     def stats(self) -> Dict[str, float]:
-        lat = np.array(self.latencies_ms) if self.latencies_ms else np.zeros(1)
+        if not self.latencies_ms:
+            # no traffic yet: report zeros, never fabricated percentiles
+            return {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_batch": 0.0,
+                    "qps": 0.0}
+        lat = np.array(self.latencies_ms)
+        with self._lock:
+            if self._t_last_done is None or self._t_first_enqueue is None:
+                span_s = max(float(np.sum(lat)) / 1e3, 1e-9)  # degraded
+            else:
+                span_s = max(self._t_last_done - self._t_first_enqueue, 1e-9)
         return {
             "n": len(self.latencies_ms),
             "p50_ms": float(np.percentile(lat, 50)),
             "p99_ms": float(np.percentile(lat, 99)),
             "mean_batch": float(np.mean(self.batch_sizes))
             if self.batch_sizes else 0.0,
-            "qps": (len(self.latencies_ms) / (np.sum(lat) / 1e3 + 1e-9))
-            if self.latencies_ms else 0.0,
+            "qps": len(self.latencies_ms) / span_s,
         }
+
+    def reset_stats(self):
+        """Drop recorded latencies and the serving window (e.g. after a
+        warmup/compile request, which would otherwise skew qps)."""
+        with self._lock:
+            self.latencies_ms = []
+            self.batch_sizes = []
+            self._t_first_enqueue = None
+            self._t_last_done = None
 
     def close(self):
         self._stop.set()

@@ -1,0 +1,79 @@
+"""Optional-hypothesis shim: real hypothesis when installed, a tiny
+deterministic fallback otherwise.
+
+The CI sandbox has no network, so `hypothesis` may be missing; test
+collection must not hard-fail. Property tests import `given`/`settings`/
+`st` from here. With hypothesis installed they run unchanged; without it
+each strategy degrades to a small fixed sample set (endpoints + interior
+points) and `given` loops over them — a smoke sweep instead of a real
+property search, but the same assertions execute.
+"""
+try:
+    import hypothesis  # noqa: F401
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # fallback shim
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+        def map(self, fn):
+            return _Strategy([fn(s) for s in self.samples])
+
+        def filter(self, fn):
+            return _Strategy([s for s in self.samples if fn(s)])
+
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=100):
+            lo, hi = int(min_value), int(max_value)
+            span = hi - lo
+            vals = {lo, hi, lo + span // 2, lo + span // 3,
+                    lo + (2 * span) // 3, lo + 1 if span else lo}
+            return _Strategy(sorted(v for v in vals if lo <= v <= hi))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            lo, hi = float(min_value), float(max_value)
+            mid = (lo + hi) / 2
+            return _Strategy([lo, mid, (lo + mid) / 2, (mid + hi) / 2, hi])
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Strategy(list(seq))
+
+        @staticmethod
+        def booleans():
+            return _Strategy([False, True])
+
+    st = _St()
+
+    def settings(*_a, **_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(**strategies):
+        names = list(strategies)
+
+        def deco(fn):
+            samples = [strategies[n].samples for n in names]
+            n_cases = max(len(s) for s in samples)
+
+            def wrapper():
+                for i in range(n_cases):
+                    case = {n: samples[j][i % len(samples[j])]
+                            for j, n in enumerate(names)}
+                    fn(**case)
+
+            # keep the original name for pytest reporting, but NOT the
+            # original signature (functools.wraps would make pytest treat
+            # the strategy kwargs as fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -1,9 +1,9 @@
 """Binary encoding + Hamming tests (core/binary.py, paper §III-D)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import binary
 

@@ -1,9 +1,9 @@
 """MaxSim late-interaction tests (core/late_interaction.py)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import late_interaction as li
 from repro.core import quantization as quant

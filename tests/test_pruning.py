@@ -1,9 +1,9 @@
 """Attention-guided pruning tests (core/pruning.py, paper §III-C)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import pruning
 

@@ -1,11 +1,10 @@
 """K-Means quantization unit + property tests (core/quantization.py)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import quantization as quant
 

@@ -44,6 +44,76 @@ def test_server_batches_and_matches_direct(rng):
     server.close()
 
 
+def test_server_stats_empty_returns_zeros():
+    server = RetrievalServer(lambda q, qm, qs: (q, q), ServeConfig())
+    st = server.stats()
+    assert st == {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_batch": 0.0,
+                  "qps": 0.0}
+    server.close()
+
+
+def test_server_qps_is_wall_clock_not_latency_sum():
+    """Concurrent requests share one batched search call: qps must come
+    from the serving-window wall clock, not the sum of overlapping
+    per-request latencies (which here is ~8x the wall clock)."""
+    import time as _time
+
+    def slow_search(q, qm, qs):
+        _time.sleep(0.05)
+        return np.zeros((q.shape[0], 5)), np.zeros((q.shape[0], 5), np.int64)
+
+    server = RetrievalServer(slow_search,
+                             ServeConfig(max_batch=8, max_wait_ms=20.0))
+    t0 = _time.perf_counter()
+    reqs = [server.submit(np.zeros((4, 8)), np.ones((4,), bool),
+                          np.zeros((4,))) for _ in range(8)]
+    for r in reqs:
+        assert r.event.wait(10)
+    wall = _time.perf_counter() - t0
+    st = server.stats()
+    assert st["n"] == 8
+    # all 8 ran in ~1 batch: the latency *sum* is ~8 * 50ms >> wall span,
+    # so the buggy formula would report < ~25 qps; wall-clock gives ~100+
+    buggy_qps = st["n"] / (sum(server.latencies_ms) / 1e3)
+    assert st["qps"] > 2 * buggy_qps
+    assert st["qps"] <= st["n"] / 0.05 * 1.5    # sane upper bound
+    assert wall < 5.0
+    server.close()
+
+
+def test_server_reset_stats_mid_flight_keeps_stats_sane():
+    """reset_stats() while a batch is inside search_fn must not poison
+    stats(): the window restarts at that batch's enqueue time."""
+    import time as _time
+
+    def slow_search(q, qm, qs):
+        _time.sleep(0.1)
+        return np.zeros((q.shape[0], 5)), np.zeros((q.shape[0], 5), np.int64)
+
+    server = RetrievalServer(slow_search,
+                             ServeConfig(max_batch=2, max_wait_ms=1.0))
+    r = server.submit(np.zeros((4, 8)), np.ones((4,), bool), np.zeros((4,)))
+    _time.sleep(0.03)                 # dispatcher is now inside search_fn
+    server.reset_stats()
+    assert r.event.wait(10)
+    st = server.stats()               # must not raise
+    assert st["n"] == 1 and st["qps"] > 0.0
+    server.close()
+
+
+def test_server_reset_stats():
+    server = RetrievalServer(
+        lambda q, qm, qs: (np.zeros((q.shape[0], 5)),
+                           np.zeros((q.shape[0], 5), np.int64)),
+        ServeConfig(max_batch=2, max_wait_ms=1.0))
+    r = server.submit(np.zeros((4, 8)), np.ones((4,), bool), np.zeros((4,)))
+    assert r.event.wait(10)
+    assert server.stats()["n"] == 1
+    server.reset_stats()
+    assert server.stats()["n"] == 0
+    server.close()
+
+
 def test_rouge_l():
     assert rag.rouge_l([1, 2, 3], [1, 2, 3]) == 1.0
     assert rag.rouge_l([1, 2, 3], [4, 5, 6]) == 0.0

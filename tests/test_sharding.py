@@ -1,12 +1,12 @@
 """Logical-axis sharding resolver tests (dist/sharding.py) — these run on
 the single CPU device; Mesh construction with 1 device is fine for
 resolution logic (axis sizes are what matter)."""
-import hypothesis.strategies as st
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
 from jax.sharding import Mesh, PartitionSpec as P
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.dist.sharding import DEFAULT_RULES, Sharder, is_logical_spec
 
