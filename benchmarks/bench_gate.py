@@ -1,0 +1,110 @@
+"""CI benchmark-regression gate.
+
+  python -m benchmarks.run --smoke --json out.json
+  python -m benchmarks.bench_gate out.json --baseline BENCH_baseline.json
+
+Compares the smoke run's serving metrics (p50/p99 latency, qps) and
+quality metrics (nDCG) against the committed baseline JSON and exits
+non-zero if any metric regressed beyond the tolerance (default +-20%).
+Improvements never fail the gate.
+
+Wall-clock metrics are normalised by each file's `calib_ms` machine-speed
+scalar (a fixed jitted matmul, benchmarks/common.calibrate_ms) before
+comparison, so a slower CI runner does not read as a code regression.
+Normalisation is strictly forgiving: it only ever discounts a slower
+machine, never inflates a faster one (fixed costs like the coalescing
+wait window don't scale with compute speed, so symmetric scaling would
+false-fail fast runners). Quality metrics are compared unnormalised.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+# (json path, direction) per gated metric: "lower" = regression when the
+# normalised value rises above baseline*(1+tol); "higher" = regression when
+# it falls below baseline*(1-tol).
+GATED = [
+    (("serving", "p50_ms"), "lower", True),
+    (("serving", "p99_ms"), "lower", True),
+    (("serving", "qps"), "higher", True),
+    (("quality", "ndcg_full"), "higher", False),
+    (("quality", "ndcg_hpc"), "higher", False),
+]
+
+
+def _get(d: dict, path):
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def compare(current: dict, baseline: dict, tolerance: float):
+    """Returns (report_lines, n_failures)."""
+    calib_cur = float(current.get("calib_ms") or 1.0)
+    calib_base = float(baseline.get("calib_ms") or 1.0)
+    speed = calib_base / calib_cur  # <1 -> this machine is slower
+    lines = [f"calib_ms: baseline {calib_base:.4f}  current {calib_cur:.4f}"
+             f"  (speed ratio {speed:.2f})"]
+    failures = 0
+    for path, direction, normalise in GATED:
+        name = ".".join(path)
+        cur, base = _get(current, path), _get(baseline, path)
+        if base is None:
+            lines.append(f"SKIP {name}: not in baseline")
+            continue
+        if cur is None:
+            lines.append(f"FAIL {name}: missing from current run")
+            failures += 1
+            continue
+        cur_n, base_n = float(cur), float(base)
+        if normalise:
+            # forgive a slower machine (speed < 1); never penalise a
+            # faster one — fixed waits don't scale with compute speed
+            forgive = min(speed, 1.0)
+            if direction == "lower":      # latency: scale to baseline speed
+                cur_n = cur_n * forgive
+            else:                         # throughput
+                cur_n = cur_n / forgive
+        if direction == "lower":
+            ok = cur_n <= base_n * (1.0 + tolerance)
+            delta = (cur_n - base_n) / base_n if base_n else 0.0
+        else:
+            ok = cur_n >= base_n * (1.0 - tolerance)
+            delta = (base_n - cur_n) / base_n if base_n else 0.0
+        tag = "PASS" if ok else "FAIL"
+        norm = " (normalised)" if normalise else ""
+        lines.append(f"{tag} {name}: baseline {base_n:.4f}  current "
+                     f"{cur_n:.4f}{norm}  regression {delta:+.1%} "
+                     f"(tol {tolerance:.0%})")
+        failures += 0 if ok else 1
+    return lines, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="metrics JSON from --smoke --json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.20)
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    lines, failures = compare(current, baseline, args.tolerance)
+    for ln in lines:
+        print(ln)
+    if failures:
+        print(f"BENCH GATE: {failures} metric(s) regressed beyond "
+              f"{args.tolerance:.0%}")
+        return 1
+    print("BENCH GATE: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Sequence
+from typing import Callable, Dict
 
 import jax
 import numpy as np
@@ -73,3 +73,16 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def calibrate_ms() -> float:
+    """Machine-speed scalar: median ms of a fixed jitted 256x256 matmul.
+
+    The CI bench gate divides wall-clock metrics by this before comparing
+    against the committed baseline, so a slower/faster runner doesn't read
+    as a code regression/improvement.
+    """
+    import jax.numpy as jnp
+    a = jnp.ones((256, 256), jnp.float32)
+    f = jax.jit(lambda x: x @ x)
+    return time_fn(f, a, warmup=3, iters=11) * 1e3

@@ -1,24 +1,33 @@
 """Paper Table IV: query latency / throughput under each configuration,
-plus the §III-C compute-reduction sweep.
+plus the §III-C compute-reduction sweep and the serving-layer benchmark.
 
 Wall-clock is measured on CPU (the container's runtime); the *ordering*
 and *relative* speedups are the reproduction target (Full > PQ-Only > HPC >
 Binary ~ DistilCol). TPU-projected times come from the roofline terms in
 benchmarks/roofline.py, not from CPU wall-clock.
+
+`serving_run` drives the asyncio continuous-batching server under
+open-loop Poisson arrivals (requests land at exponential gaps regardless
+of completions — the honest way to measure tail latency) and reports
+p50/p99/qps plus per-ladder-rung batch occupancy. `serving_compare` runs
+the power-of-two padding ladder against the v1 single-compiled-shape
+server at the same arrival rate: at occupancy < 50% the ladder should win
+p50, because a lone straggler pads to 1-2 rows instead of max_batch.
 """
 from __future__ import annotations
 
-from typing import List
+import asyncio
+from typing import List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import time_fn
 from repro.core import late_interaction as li
 from repro.core import pruning
 from repro.data import synthetic
 from repro.retrieval import Corpus, HPCConfig, Query, Retriever
+from repro.serving.client import drive
+from repro.serving.server import AsyncRetrievalServer, ServeConfig
 
 
 def run(seed: int = 0, verbose: bool = True) -> List[dict]:
@@ -79,5 +88,83 @@ def run(seed: int = 0, verbose: bool = True) -> List[dict]:
     return rows
 
 
+def _build_search_fn(seed: int, spec: synthetic.CorpusSpec, top_k: int):
+    """Tiny flat-backend index + jitted search, shared by serving benches."""
+    key = jax.random.PRNGKey(seed)
+    data = synthetic.make_retrieval_corpus(key, spec)
+    cfg = HPCConfig(k=min(256, spec.n_docs), backend="flat",
+                    prune_side="doc", p=60.0)
+    retriever = Retriever(cfg)
+    state = retriever.build(key, Corpus(data.doc_patches, data.doc_mask,
+                                        data.doc_salience))
+
+    @jax.jit
+    def search(q, qm, qs):
+        return retriever.search(state, Query(q, qm, qs), k=top_k)
+
+    return search, data
+
+
+def serving_run(seed: int = 0, spec: Optional[synthetic.CorpusSpec] = None,
+                rate_qps: float = 150.0, n_requests: int = 128,
+                max_batch: int = 16, max_wait_ms: float = 2.0,
+                ladder: Optional[Tuple[int, ...]] = None, top_k: int = 10,
+                search_data=None, verbose: bool = True) -> dict:
+    """One open-loop Poisson serving run; returns the stats row.
+
+    `ladder=None` uses the power-of-two padding ladder; `ladder=(max_batch,)`
+    reproduces the v1 single-compiled-shape server. Pass `search_data` (the
+    `_build_search_fn` pair) to reuse one index across runs.
+    """
+    if search_data is None:
+        if spec is None:
+            spec = synthetic.CorpusSpec(n_docs=2048, n_queries=32)
+        search_data = _build_search_fn(seed, spec, top_k)
+    search, data = search_data
+    server = AsyncRetrievalServer(
+        search, ServeConfig(max_batch=max_batch, max_wait_ms=max_wait_ms,
+                            top_k=top_k, ladder=ladder))
+    server.warm_shapes(data.query_patches[0], data.query_mask[0],
+                       data.query_salience[0])
+
+    async def _go():
+        await drive(server, data.query_patches, data.query_mask,
+                    data.query_salience, n_requests=n_requests,
+                    rate_qps=rate_qps, seed=seed + 1)
+        await server.aclose()
+
+    asyncio.run(_go())
+    st = server.stats()
+    row = {"server": "ladder" if len(server.ladder) > 1 else "single-shape",
+           "ladder": server.ladder, "rate_qps": rate_qps,
+           "occupancy": st["mean_batch"] / max_batch, **st}
+    if verbose:
+        rungs = " ".join(f"B={b}:{v['batches']}x@{v['occupancy']:.2f}"
+                         for b, v in st["rungs"].items())
+        print(f"  {row['server']:12s} rate={rate_qps:6.1f}/s  "
+              f"p50 {st['p50_ms']:7.2f}ms  p99 {st['p99_ms']:7.2f}ms  "
+              f"{st['qps']:6.1f} QPS  occ {row['occupancy']:.2f}  [{rungs}]")
+    return row
+
+
+def serving_compare(seed: int = 0, rate_qps: float = 150.0,
+                    n_requests: int = 128, max_batch: int = 16,
+                    verbose: bool = True) -> List[dict]:
+    """Padding ladder vs v1 single compiled shape at the same arrival rate."""
+    spec = synthetic.CorpusSpec(n_docs=2048, n_queries=32)
+    search_data = _build_search_fn(seed, spec, top_k=10)
+    if verbose:
+        print("  open-loop Poisson serving (ladder vs single shape):")
+    rows = [serving_run(seed, rate_qps=rate_qps, n_requests=n_requests,
+                        max_batch=max_batch, ladder=ladder,
+                        search_data=search_data, verbose=verbose)
+            for ladder in (None, (max_batch,))]
+    if verbose and rows[0]["occupancy"] < 0.5:
+        win = rows[1]["p50_ms"] / max(rows[0]["p50_ms"], 1e-9)
+        print(f"  ladder p50 win at occupancy<50%: {win:.2f}x")
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    serving_compare()

@@ -10,12 +10,9 @@ from __future__ import annotations
 from typing import List
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import binary, quantization as quant
 from repro.data import synthetic
-from repro.models import recsys
 from repro.retrieval import Corpus, HPCConfig, Retriever
 
 

@@ -1,8 +1,10 @@
-"""Serve a quantized HPC-ColPali index behind the continuous-batching
-retrieval server and fire concurrent client requests at it.
+"""Serve a quantized HPC-ColPali index behind the asyncio
+continuous-batching server (power-of-two padding ladder) and fire
+open-loop Poisson traffic at it.
 
   PYTHONPATH=src python examples/serve_retrieval.py
-(thin wrapper over repro.launch.serve with demo-sized defaults)
+(thin wrapper over repro.launch.serve with demo-sized defaults; pass
+--single-shape to feel the v1 pad-to-max-batch latency difference)
 """
 import os
 import sys
@@ -13,4 +15,5 @@ from repro.launch.serve import main
 
 if __name__ == "__main__":
     main(["--n-docs", "2048", "--queries", "128", "--backend", "flat",
-          "--k", "256", "--p", "60", "--max-batch", "8"])
+          "--k", "256", "--p", "60", "--max-batch", "8",
+          "--rate-qps", "150"] + sys.argv[1:])

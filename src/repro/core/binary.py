@@ -15,7 +15,6 @@ HBM read of the packed words.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ codebook building block the paper lists as future work (§VII).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Tuple
 
 import jax

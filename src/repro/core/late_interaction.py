@@ -17,7 +17,6 @@ the decode is folded into a VMEM table lookup. See DESIGN.md §2.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax

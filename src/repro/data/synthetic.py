@@ -21,11 +21,10 @@ well-defined:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Array = jax.Array
 

@@ -1,15 +1,20 @@
 """Retrieval serving CLI: build an HPC-ColPali index over a synthetic
-corpus and serve batched queries through the continuous-batching server.
+corpus and serve batched queries through the asyncio continuous-batching
+server (power-of-two padding ladder).
 
   PYTHONPATH=src python -m repro.launch.serve --n-docs 4096 --queries 256 \
       --backend flat --k 256 --p 60
 
 `--backend` names a registry backend (float_flat / flat / ivf / hamming);
-the deprecated `--mode`/`--index` pair is still accepted.
+the deprecated `--mode`/`--index` pair is still accepted. `--rate-qps`
+switches from closed-loop (submit everything at once) to an open-loop
+Poisson arrival process; `--single-shape` disables the padding ladder
+(v1 behaviour: every batch pads to --max-batch).
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -19,7 +24,8 @@ from repro.core.index import IVFConfig
 from repro.data import synthetic
 from repro.retrieval import (Corpus, HPCConfig, Query, Retriever,
                              available_backends)
-from repro.serving.server import RetrievalServer, ServeConfig
+from repro.serving.client import drive
+from repro.serving.server import AsyncRetrievalServer, ServeConfig
 
 
 def main(argv=None):
@@ -38,6 +44,10 @@ def main(argv=None):
     ap.add_argument("--p", type=float, default=60.0)
     ap.add_argument("--top-k", type=int, default=10)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--rate-qps", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate (0 = closed loop)")
+    ap.add_argument("--single-shape", action="store_true",
+                    help="v1 behaviour: pad every batch to --max-batch")
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(0)
@@ -63,32 +73,38 @@ def main(argv=None):
     def search(q, qm, qs):
         return retriever.search(state, Query(q, qm, qs), k=args.top_k)
 
-    server = RetrievalServer(search, ServeConfig(max_batch=args.max_batch,
-                                                 top_k=args.top_k))
-    # warmup compile (excluded from the serving-window stats)
-    server.query(data.query_patches[0], data.query_mask[0],
-                 data.query_salience[0])
-    server.reset_stats()
-
-    hits = 0
+    ladder = (args.max_batch,) if args.single_shape else None
+    server = AsyncRetrievalServer(
+        search, ServeConfig(max_batch=args.max_batch, top_k=args.top_k,
+                            ladder=ladder))
+    # pre-compile every ladder rung (excluded from the serving-window stats)
     t0 = time.perf_counter()
-    results = []
-    for i in range(args.queries):
-        results.append(server.submit(data.query_patches[i],
-                                     data.query_mask[i],
-                                     data.query_salience[i]))
-    for i, r in enumerate(results):
-        r.event.wait(30)
-        scores, ids = r.result
+    server.warm_shapes(data.query_patches[0], data.query_mask[0],
+                       data.query_salience[0])
+    print(f"ladder {server.ladder} warmed in {time.perf_counter()-t0:.2f}s")
+
+    async def _serve():
+        t0 = time.perf_counter()
+        results = await drive(server, data.query_patches, data.query_mask,
+                              data.query_salience, n_requests=args.queries,
+                              rate_qps=args.rate_qps, seed=1)
+        wall = time.perf_counter() - t0
+        await server.aclose()
+        return results, wall
+
+    results, wall = asyncio.run(_serve())
+    hits = 0
+    for i, (scores, ids) in enumerate(results):
         rel = np.asarray(data.relevance[i])
         hits += int((rel[ids] > 0).any())
-    wall = time.perf_counter() - t0
     st = server.stats()
+    rungs = " ".join(f"B={b}:{v['batches']}x@{v['occupancy']:.2f}"
+                     for b, v in st["rungs"].items())
     print(f"served {args.queries} queries in {wall:.2f}s "
           f"({st['qps']:.1f} QPS) | hit@{args.top_k} "
           f"{hits/args.queries:.3f} | p50 {st['p50_ms']:.1f}ms "
           f"p99 {st['p99_ms']:.1f}ms | mean batch {st['mean_batch']:.1f}")
-    server.close()
+    print(f"ladder occupancy: {rungs}")
 
 
 if __name__ == "__main__":

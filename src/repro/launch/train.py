@@ -11,8 +11,6 @@ for end-to-end runnable training (examples/ use it with ~100M configs).
 from __future__ import annotations
 
 import argparse
-import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

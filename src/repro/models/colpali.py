@@ -20,7 +20,7 @@ softmax over MaxSim(query_i, doc_j) with the matching doc on the diagonal.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,6 @@ Implementation notes (DESIGN.md §4, §6):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

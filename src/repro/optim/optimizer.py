@@ -12,8 +12,7 @@ paper's quantization idea applied to optimizer state (beyond-paper).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Literal, NamedTuple, Optional, Tuple
+from typing import Any, Literal, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,3 +1,6 @@
-"""Serving substrate: continuous-batching retrieval server."""
+"""Serving substrate: asyncio continuous-batching retrieval server."""
 
-from repro.serving import server  # noqa: F401
+from repro.serving.client import drive  # noqa: F401
+from repro.serving.server import (AsyncRetrievalServer,  # noqa: F401
+                                  RetrievalServer, ServeConfig, ServerClosed,
+                                  padding_ladder)

@@ -1,23 +1,58 @@
-"""Batched retrieval serving with continuous micro-batching.
+"""Async continuous-batching retrieval serving (v2).
 
-RetrievalServer fronts the (possibly mesh-sharded) HPC-ColPali index:
-requests land on a queue; a dispatcher thread coalesces up to
-`max_batch` requests (or `max_wait_ms`, whichever first — classic
-continuous batching), pads the query tensors to the compiled batch shape,
-runs the jitted query pipeline once, and fans results back out per-request.
-Latency percentiles (p50/p99) are tracked per request, matching the
-paper's Table IV metric definitions.
+`AsyncRetrievalServer` is asyncio-native: clients ``await server.query(...)``;
+a coalescing loop drains the request queue under ``max_wait_ms`` and pads each
+batch up a **power-of-two ladder** of compiled shapes (B in {1, 2, 4, ...,
+max_batch}) instead of always padding to ``max_batch`` — a batch of 3 pads to
+4, not 32, so a lone straggler pays single-digit-row compute. Shapes are
+warmed lazily (jax.jit's shape-keyed cache compiles each (B, Mq) on first
+use); ``warm_shapes`` pre-compiles the whole ladder up front.
+
+Host staging overlaps device compute by double-buffering: the dispatcher
+stages batch n+1's numpy->device transfer on the event loop while batch n's
+jitted search runs in a bounded executor; ``jax.block_until_ready`` happens
+only at fan-out, off the event loop, so percentiles include device time but
+the loop never blocks on it.
+
+`RetrievalServer` is the thin sync facade (thread-backed event loop) kept so
+v1 call sites — ``submit`` returning a waitable request, blocking ``query`` —
+keep working unchanged. ``close`` drains: in-flight batches complete and
+deliver real results; requests still queued get a terminal `ServerClosed`
+error instead of hanging until their client-side timeout.
+
+Latency percentiles (p50/p99) are tracked per request, matching the paper's
+Table IV metric definitions; ``stats()`` additionally reports per-ladder-rung
+batch occupancy so under-filled compiled shapes are visible.
 """
 from __future__ import annotations
 
+import asyncio
 import dataclasses
-import queue
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class ServerClosed(RuntimeError):
+    """Terminal error set on requests the server will never serve."""
+
+
+def padding_ladder(max_batch: int) -> Tuple[int, ...]:
+    """Powers of two up to ``max_batch`` (always ending at ``max_batch``)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    rungs: List[int] = []
+    b = 1
+    while b < max_batch:
+        rungs.append(b)
+        b *= 2
+    rungs.append(max_batch)
+    return tuple(rungs)
 
 
 @dataclasses.dataclass
@@ -25,128 +60,418 @@ class ServeConfig:
     max_batch: int = 8
     max_wait_ms: float = 2.0
     top_k: int = 10
+    # Compiled batch shapes. None -> power-of-two ladder up to max_batch;
+    # a single-element tuple like (max_batch,) reproduces the v1 behaviour
+    # of padding every batch to one full compiled shape.
+    ladder: Optional[Tuple[int, ...]] = None
+    # Double-buffer depth: how many staged batches may be in flight on the
+    # device at once. 2 = stage n+1 while n computes (the default); 1
+    # disables the overlap.
+    max_inflight: int = 2
+
+    def resolved_ladder(self) -> Tuple[int, ...]:
+        if self.ladder is None:
+            return padding_ladder(self.max_batch)
+        rungs = tuple(sorted(set(int(b) for b in self.ladder)))
+        if not rungs or rungs[0] < 1:
+            raise ValueError(f"invalid ladder {self.ladder}")
+        if rungs[-1] != self.max_batch:
+            raise ValueError(
+                f"ladder {rungs} must end at max_batch={self.max_batch}"
+            )
+        return rungs
+
+
+class _Item:
+    """One queued query inside the asyncio server."""
+
+    __slots__ = ("q_emb", "q_mask", "q_sal", "future", "t_enqueue")
+
+    def __init__(self, q_emb, q_mask, q_sal, future, t_enqueue):
+        self.q_emb, self.q_mask, self.q_sal = q_emb, q_mask, q_sal
+        self.future = future
+        self.t_enqueue = t_enqueue
+
+
+_STOP = object()
+
+
+class AsyncRetrievalServer:
+    """search_fn(q_emb (B,Mq,D), q_mask, q_sal) -> (scores (B,k), ids).
+
+    Bind to one event loop: the first ``query`` (or an explicit ``start``)
+    captures the running loop; all queries must come from that loop.
+    """
+
+    def __init__(self, search_fn: Callable, cfg: ServeConfig):
+        self.search_fn = search_fn
+        self.cfg = cfg
+        self.ladder = cfg.resolved_ladder()
+        self._queue: Optional[asyncio.Queue] = None
+        self._dispatcher: Optional[asyncio.Task] = None
+        self._inflight: Optional[asyncio.Semaphore] = None
+        self._fanout_tasks: set = set()
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(1, cfg.max_inflight),
+            thread_name_prefix="serve-compute",
+        )
+        self._closing = False
+        self._closed = False
+        # (B, Mq) shapes that have gone through the jit cache at least once
+        self._warmed: set = set()
+        # -- stats (threading lock: read from facade threads, written from
+        # fan-out tasks; the wall-clock span invariant is the same as v1:
+        # qps = requests / (first enqueue -> last completion), never the sum
+        # of overlapping per-request latencies) --
+        self._lock = threading.Lock()
+        self.latencies_ms: List[float] = []
+        self.batch_sizes: List[int] = []
+        self._rung_counts: Dict[int, int] = {}
+        self._rung_occupied: Dict[int, int] = {}
+        self._t_first_enqueue: Optional[float] = None
+        self._t_last_done: Optional[float] = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self) -> None:
+        """Idempotent: bind to the running loop and start the dispatcher."""
+        if self._closed:
+            raise ServerClosed("server already closed")
+        if self._queue is None:
+            self._queue = asyncio.Queue()
+            self._inflight = asyncio.Semaphore(max(1, self.cfg.max_inflight))
+            self._dispatcher = asyncio.get_running_loop().create_task(
+                self._dispatch()
+            )
+
+    async def aclose(self) -> None:
+        """Stop serving. In-flight batches complete and deliver results;
+        still-queued requests get a terminal `ServerClosed` error."""
+        if self._closed:
+            return
+        self._closing = True
+        if self._queue is not None:
+            await self._queue.put(_STOP)
+            # never let a dispatcher crash skip the drain below
+            await asyncio.gather(self._dispatcher, return_exceptions=True)
+            while True:
+                try:
+                    item = self._queue.get_nowait()
+                except asyncio.QueueEmpty:
+                    break
+                if item is not _STOP and not item.future.done():
+                    item.future.set_exception(
+                        ServerClosed("server closed before request ran")
+                    )
+        if self._fanout_tasks:
+            await asyncio.gather(
+                *list(self._fanout_tasks), return_exceptions=True
+            )
+        self._pool.shutdown(wait=True)
+        self._closed = True
+
+    # -- client API ---------------------------------------------------------
+
+    async def query(self, q_emb, q_mask, q_sal, *, _t_enqueue=None):
+        """Awaitable single-query search; returns (scores (k,), ids (k,))."""
+        if self._closing or self._closed:
+            raise ServerClosed("server is closed")
+        await self.start()
+        t_enq = time.perf_counter() if _t_enqueue is None else _t_enqueue
+        fut = asyncio.get_running_loop().create_future()
+        item = _Item(
+            np.asarray(q_emb), np.asarray(q_mask), np.asarray(q_sal), fut,
+            t_enq,
+        )
+        with self._lock:
+            if self._t_first_enqueue is None:
+                self._t_first_enqueue = t_enq
+        await self._queue.put(item)
+        return await fut
+
+    def rung_for(self, n: int) -> int:
+        """Smallest ladder rung that fits a batch of n requests."""
+        for b in self.ladder:
+            if b >= n:
+                return b
+        return self.ladder[-1]
+
+    def warm_shapes(self, q_emb, q_mask, q_sal, rungs=None) -> None:
+        """Pre-compile ladder rungs for one query geometry (blocking).
+
+        Takes a single example query (Mq, D); tiles it to each rung and runs
+        the jitted search once so serving never pays a compile stall.
+        """
+        q = np.asarray(q_emb)
+        qm = np.asarray(q_mask)
+        qs = np.asarray(q_sal)
+        for b in rungs if rungs is not None else self.ladder:
+            out = self.search_fn(
+                jnp.asarray(np.broadcast_to(q, (b,) + q.shape)),
+                jnp.asarray(np.broadcast_to(qm, (b,) + qm.shape)),
+                jnp.asarray(np.broadcast_to(qs, (b,) + qs.shape)),
+            )
+            jax.block_until_ready(out)
+            self._warmed.add((b, q.shape[0]))
+
+    @property
+    def compiled_shapes(self) -> set:
+        """(B, Mq) pairs that have hit the jit compile cache."""
+        return set(self._warmed)
+
+    # -- dispatcher ---------------------------------------------------------
+
+    async def _dispatch(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            item = await self._queue.get()
+            if item is _STOP:
+                return
+            if self._closing:
+                if not item.future.done():
+                    item.future.set_exception(
+                        ServerClosed("server closed before request ran")
+                    )
+                continue
+            batch = [item]
+            stop_after = False
+            deadline = loop.time() + self.cfg.max_wait_ms / 1e3
+            while len(batch) < self.cfg.max_batch:
+                rem = deadline - loop.time()
+                if rem <= 0:
+                    break
+                try:
+                    nxt = await asyncio.wait_for(self._queue.get(), rem)
+                except asyncio.TimeoutError:
+                    break
+                if nxt is _STOP:
+                    stop_after = True
+                    break
+                batch.append(nxt)
+            # bound in-flight batches (double buffer): once a slot frees we
+            # stage the next batch here while the previous one still computes
+            await self._inflight.acquire()
+            try:
+                staged = self._stage(batch)
+            except Exception as e:  # noqa: BLE001 - e.g. mixed-shape batch
+                # fail this batch but keep the dispatcher alive: a staging
+                # error (say, two coalesced queries with different Mq) must
+                # not strand every later request on a dead queue
+                self._inflight.release()
+                for r in batch:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                if stop_after:
+                    return
+                continue
+            task = loop.create_task(self._fanout(batch, *staged))
+            self._fanout_tasks.add(task)
+            task.add_done_callback(self._fanout_tasks.discard)
+            if stop_after:
+                return
+
+    def _stage(self, batch: List[_Item]):
+        """Host staging: pad to the ladder rung and start the host->device
+        transfer. Runs on the event loop, overlapped with the previous
+        batch's device compute."""
+        rung = self.rung_for(len(batch))
+        first = batch[0]
+        q = np.zeros((rung,) + first.q_emb.shape, first.q_emb.dtype)
+        qm = np.zeros((rung,) + first.q_mask.shape, bool)
+        qs = np.zeros((rung,) + first.q_sal.shape, first.q_sal.dtype)
+        for i, r in enumerate(batch):
+            q[i], qm[i], qs[i] = r.q_emb, r.q_mask, r.q_sal
+        self._warmed.add((rung, first.q_emb.shape[0]))
+        return rung, jnp.asarray(q), jnp.asarray(qm), jnp.asarray(qs)
+
+    async def _fanout(self, batch: List[_Item], rung: int, q, qm, qs) -> None:
+        loop = asyncio.get_running_loop()
+
+        def _compute():
+            out = self.search_fn(q, qm, qs)
+            jax.block_until_ready(out)  # only blocking point, off the loop
+            return out
+
+        try:
+            scores, ids = await loop.run_in_executor(self._pool, _compute)
+        except Exception as e:  # noqa: BLE001 - forwarded to every waiter
+            for r in batch:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            self._inflight.release()
+            return
+        scores, ids = np.asarray(scores), np.asarray(ids)
+        now = time.perf_counter()
+        with self._lock:
+            self._t_last_done = now
+            self.batch_sizes.append(len(batch))
+            self._rung_counts[rung] = self._rung_counts.get(rung, 0) + 1
+            self._rung_occupied[rung] = (
+                self._rung_occupied.get(rung, 0) + len(batch)
+            )
+            if self._t_first_enqueue is None:
+                # reset_stats() ran while this batch was in flight: restart
+                # the window at this batch's earliest enqueue so the
+                # span/latency invariant holds
+                self._t_first_enqueue = min(r.t_enqueue for r in batch)
+            for r in batch:
+                self.latencies_ms.append((now - r.t_enqueue) * 1e3)
+        for i, r in enumerate(batch):
+            if not r.future.done():
+                r.future.set_result((scores[i], ids[i]))
+        self._inflight.release()
+
+    # -- stats --------------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            lat = np.array(self.latencies_ms)
+            batch_sizes = list(self.batch_sizes)
+            rungs = {
+                b: {
+                    "batches": self._rung_counts[b],
+                    "occupancy": self._rung_occupied[b]
+                    / (self._rung_counts[b] * b),
+                }
+                for b in sorted(self._rung_counts)
+            }
+            t0, t1 = self._t_first_enqueue, self._t_last_done
+        if lat.size == 0:
+            # no traffic yet: report zeros, never fabricated percentiles
+            return {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_batch": 0.0,
+                    "qps": 0.0, "rungs": {}}
+        if t0 is None or t1 is None:
+            span_s = max(float(np.sum(lat)) / 1e3, 1e-9)  # degraded
+        else:
+            span_s = max(t1 - t0, 1e-9)
+        return {
+            "n": int(lat.size),
+            "p50_ms": float(np.percentile(lat, 50)),
+            "p99_ms": float(np.percentile(lat, 99)),
+            "mean_batch": float(np.mean(batch_sizes)) if batch_sizes else 0.0,
+            "qps": lat.size / span_s,
+            "rungs": rungs,
+        }
+
+    def reset_stats(self) -> None:
+        """Drop recorded latencies and the serving window (e.g. after a
+        warmup/compile request, which would otherwise skew qps)."""
+        with self._lock:
+            self.latencies_ms = []
+            self.batch_sizes = []
+            self._rung_counts = {}
+            self._rung_occupied = {}
+            self._t_first_enqueue = None
+            self._t_last_done = None
 
 
 class _Request:
-    __slots__ = ("q_emb", "q_mask", "q_sal", "event", "result", "t_enqueue")
+    """v1 request handle: wait on ``event``, read ``result`` / ``error``."""
+
+    __slots__ = ("q_emb", "q_mask", "q_sal", "event", "result", "error",
+                 "t_enqueue")
 
     def __init__(self, q_emb, q_mask, q_sal):
         self.q_emb, self.q_mask, self.q_sal = q_emb, q_mask, q_sal
         self.event = threading.Event()
         self.result = None
+        self.error: Optional[BaseException] = None
         self.t_enqueue = time.perf_counter()
 
 
 class RetrievalServer:
-    """search_fn(q_emb (B,Mq,D), q_mask, q_sal) -> (scores (B,k), ids)."""
+    """Sync facade over `AsyncRetrievalServer` (thread-backed event loop).
+
+    Keeps the v1 surface — ``submit`` -> waitable request, blocking
+    ``query`` — so existing call sites work unchanged while the serving
+    core is asyncio."""
 
     def __init__(self, search_fn: Callable, cfg: ServeConfig):
         self.search_fn = search_fn
         self.cfg = cfg
-        self._q: "queue.Queue[_Request]" = queue.Queue()
-        self._stop = threading.Event()
-        self.latencies_ms: List[float] = []
-        self.batch_sizes: List[int] = []
-        # wall-clock span of the serving window: first enqueue -> last
-        # completion. qps must be requests / span, NOT requests / sum of
-        # per-request latencies (overlapping requests would make the sum
-        # exceed the wall clock and wildly underestimate throughput).
-        self._lock = threading.Lock()
-        self._t_first_enqueue: Optional[float] = None
-        self._t_last_done: Optional[float] = None
-        self._thread = threading.Thread(target=self._dispatch, daemon=True)
+        self._async = AsyncRetrievalServer(search_fn, cfg)
+        self._loop = asyncio.new_event_loop()
+        self._thread = threading.Thread(
+            target=self._loop.run_forever, name="serve-loop", daemon=True
+        )
         self._thread.start()
+        self._run(self._async.start()).result(timeout=10.0)
+        self._closed = False
+        # serialises submit-vs-close: a submit never schedules onto a loop
+        # that close() has already begun stopping
+        self._lifecycle = threading.Lock()
+
+    def _run(self, coro):
+        return asyncio.run_coroutine_threadsafe(coro, self._loop)
+
+    # -- v1 surface ---------------------------------------------------------
 
     def submit(self, q_emb, q_mask, q_sal) -> _Request:
         req = _Request(np.asarray(q_emb), np.asarray(q_mask),
                        np.asarray(q_sal))
-        with self._lock:
-            if self._t_first_enqueue is None:
-                self._t_first_enqueue = req.t_enqueue
-        self._q.put(req)
+
+        async def _go():
+            try:
+                req.result = await self._async.query(
+                    req.q_emb, req.q_mask, req.q_sal,
+                    _t_enqueue=req.t_enqueue,
+                )
+            except BaseException as e:  # noqa: BLE001 - handed to waiter
+                req.error = e
+            finally:
+                req.event.set()
+
+        with self._lifecycle:
+            if self._closed:
+                req.error = ServerClosed("server is closed")
+                req.event.set()
+                return req
+            try:
+                self._run(_go())
+            except RuntimeError as e:   # loop torn down concurrently
+                req.error = ServerClosed(f"server is closed ({e})")
+                req.event.set()
         return req
 
     def query(self, q_emb, q_mask, q_sal, timeout: float = 30.0):
         req = self.submit(q_emb, q_mask, q_sal)
         if not req.event.wait(timeout):
             raise TimeoutError("retrieval request timed out")
+        if req.error is not None:
+            raise req.error
         return req.result
 
-    def _dispatch(self):
-        while not self._stop.is_set():
-            try:
-                first = self._q.get(timeout=0.1)
-            except queue.Empty:
-                continue
-            batch = [first]
-            deadline = time.perf_counter() + self.cfg.max_wait_ms / 1e3
-            while len(batch) < self.cfg.max_batch:
-                rem = deadline - time.perf_counter()
-                if rem <= 0:
-                    break
-                try:
-                    batch.append(self._q.get(timeout=rem))
-                except queue.Empty:
-                    break
-            self._run(batch)
+    def warm_shapes(self, q_emb, q_mask, q_sal, rungs=None) -> None:
+        self._async.warm_shapes(q_emb, q_mask, q_sal, rungs)
 
-    def _run(self, batch: List[_Request]):
-        b = self.cfg.max_batch
-        q = np.stack([r.q_emb for r in batch])
-        qm = np.stack([r.q_mask for r in batch])
-        qs = np.stack([r.q_sal for r in batch])
-        if len(batch) < b:                       # pad to the compiled shape
-            pad = b - len(batch)
-            q = np.concatenate([q, np.zeros((pad,) + q.shape[1:], q.dtype)])
-            qm = np.concatenate([qm, np.zeros((pad,) + qm.shape[1:], bool)])
-            qs = np.concatenate([qs, np.zeros((pad,) + qs.shape[1:],
-                                              qs.dtype)])
-        scores, ids = self.search_fn(jnp.asarray(q), jnp.asarray(qm),
-                                     jnp.asarray(qs))
-        scores, ids = np.asarray(scores), np.asarray(ids)
-        now = time.perf_counter()
-        self.batch_sizes.append(len(batch))
-        with self._lock:
-            self._t_last_done = now
-            if self._t_first_enqueue is None:
-                # reset_stats() ran while this batch was in flight: restart
-                # the window at this batch's earliest enqueue so the
-                # span/latency invariant holds
-                self._t_first_enqueue = min(r.t_enqueue for r in batch)
-        for i, r in enumerate(batch):
-            r.result = (scores[i], ids[i])
-            self.latencies_ms.append((now - r.t_enqueue) * 1e3)
-            r.event.set()
+    @property
+    def ladder(self) -> Tuple[int, ...]:
+        return self._async.ladder
 
-    def stats(self) -> Dict[str, float]:
-        if not self.latencies_ms:
-            # no traffic yet: report zeros, never fabricated percentiles
-            return {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_batch": 0.0,
-                    "qps": 0.0}
-        lat = np.array(self.latencies_ms)
-        with self._lock:
-            if self._t_last_done is None or self._t_first_enqueue is None:
-                span_s = max(float(np.sum(lat)) / 1e3, 1e-9)  # degraded
-            else:
-                span_s = max(self._t_last_done - self._t_first_enqueue, 1e-9)
-        return {
-            "n": len(self.latencies_ms),
-            "p50_ms": float(np.percentile(lat, 50)),
-            "p99_ms": float(np.percentile(lat, 99)),
-            "mean_batch": float(np.mean(self.batch_sizes))
-            if self.batch_sizes else 0.0,
-            "qps": len(self.latencies_ms) / span_s,
-        }
+    @property
+    def latencies_ms(self) -> List[float]:
+        return self._async.latencies_ms
 
-    def reset_stats(self):
-        """Drop recorded latencies and the serving window (e.g. after a
-        warmup/compile request, which would otherwise skew qps)."""
-        with self._lock:
-            self.latencies_ms = []
-            self.batch_sizes = []
-            self._t_first_enqueue = None
-            self._t_last_done = None
+    @property
+    def batch_sizes(self) -> List[int]:
+        return self._async.batch_sizes
+
+    def stats(self) -> Dict[str, Any]:
+        return self._async.stats()
+
+    def reset_stats(self) -> None:
+        self._async.reset_stats()
 
     def close(self):
-        self._stop.set()
-        self._thread.join(timeout=2.0)
+        """Drain and stop: in-flight batches deliver results, queued
+        requests get a terminal `ServerClosed` error (no 30 s timeouts)."""
+        with self._lifecycle:
+            if self._closed:
+                return
+            self._closed = True
+        try:
+            self._run(self._async.aclose()).result(timeout=30.0)
+        finally:
+            self._loop.call_soon_threadsafe(self._loop.stop)
+            self._thread.join(timeout=5.0)
+            self._loop.close()

@@ -10,8 +10,8 @@ property search, but the same assertions execute.
 """
 try:
     import hypothesis  # noqa: F401
-    import hypothesis.strategies as st
-    from hypothesis import given, settings
+    import hypothesis.strategies as st  # noqa: F401 - re-export
+    from hypothesis import given, settings  # noqa: F401 - re-export
     HAVE_HYPOTHESIS = True
 except ImportError:                                     # fallback shim
     HAVE_HYPOTHESIS = False

@@ -1,0 +1,245 @@
+"""Async serving v2: padding ladder, concurrent submitters, drain-on-close.
+
+The ladder property test runs under hypothesis when installed and under
+the deterministic shim (tests/_hypothesis_compat) otherwise.
+"""
+import asyncio
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.retrieval import Corpus, HPCConfig, Query, Retriever
+from repro.serving.server import (AsyncRetrievalServer, RetrievalServer,
+                                  ServeConfig, ServerClosed, padding_ladder)
+from tests._hypothesis_compat import given, settings, st
+
+LADDER = (1, 2, 4, 8)
+N_QUERIES = 8
+_CACHE = {}
+
+
+def _index():
+    """Small flat-backend index + jitted search, built once per session."""
+    if "search" not in _CACHE:
+        key = jax.random.PRNGKey(0)
+        spec = synthetic.CorpusSpec(n_docs=128, n_queries=N_QUERIES,
+                                    n_patches=8, n_q_patches=4, dim=16,
+                                    n_topics=4)
+        data = synthetic.make_retrieval_corpus(key, spec)
+        cfg = HPCConfig(k=64, p=60.0, backend="flat", prune_side="doc",
+                        rerank=16, kmeans_iters=5)
+        retriever = Retriever(cfg)
+        state = retriever.build(key, Corpus(data.doc_patches, data.doc_mask,
+                                            data.doc_salience))
+
+        @jax.jit
+        def search(q, qm, qs):
+            return retriever.search(state, Query(q, qm, qs), k=5)
+
+        _CACHE["search"], _CACHE["data"] = search, data
+    return _CACHE["search"], _CACHE["data"]
+
+
+def _search_at_rung(qi: int, rung: int, fill_real: bool):
+    """Run query qi padded to `rung` rows; returns its (scores, ids) row.
+
+    fill_real=True packs other live queries behind it (a coalesced batch);
+    False zero-pads (a straggler) — results must not depend on either.
+    """
+    search, data = _index()
+    q = np.zeros((rung,) + data.query_patches[qi].shape,
+                 np.asarray(data.query_patches).dtype)
+    qm = np.zeros((rung,) + data.query_mask[qi].shape, bool)
+    qs = np.zeros((rung,) + data.query_salience[qi].shape,
+                  np.asarray(data.query_salience).dtype)
+    q[0] = data.query_patches[qi]
+    qm[0] = data.query_mask[qi]
+    qs[0] = data.query_salience[qi]
+    if fill_real:
+        for j in range(1, rung):
+            k2 = (qi + j) % N_QUERIES
+            q[j] = data.query_patches[k2]
+            qm[j] = data.query_mask[k2]
+            qs[j] = data.query_salience[k2]
+    s, i = search(q, qm, qs)
+    return np.asarray(s[0]), np.asarray(i[0])
+
+
+def _fake_search(q, qm, qs):
+    b = q.shape[0]
+    return (np.zeros((b, 5), np.float32),
+            np.tile(np.arange(5, dtype=np.int64), (b, 1)))
+
+
+def test_padding_ladder_and_rung_selection():
+    assert padding_ladder(1) == (1,)
+    assert padding_ladder(8) == (1, 2, 4, 8)
+    assert padding_ladder(6) == (1, 2, 4, 6)
+    srv = AsyncRetrievalServer(_fake_search, ServeConfig(max_batch=8))
+    assert [srv.rung_for(n) for n in (1, 2, 3, 4, 5, 8)] == [1, 2, 4, 4, 8, 8]
+    with pytest.raises(ValueError):
+        ServeConfig(max_batch=8, ladder=(2, 4)).resolved_ladder()
+    with pytest.raises(ValueError):
+        padding_ladder(0)
+
+
+@settings(deadline=None, max_examples=16)
+@given(qi=st.integers(min_value=0, max_value=N_QUERIES - 1),
+       rung_idx=st.integers(min_value=0, max_value=len(LADDER) - 1),
+       fill_real=st.booleans())
+def test_ladder_rungs_bitwise_identical(qi, rung_idx, fill_real):
+    """A query's scores/ids are bitwise-identical at every ladder rung —
+    which compiled shape served it, and what padded the remaining rows,
+    must be unobservable."""
+    ref_s, ref_i = _search_at_rung(qi, 1, fill_real=False)
+    s, i = _search_at_rung(qi, LADDER[rung_idx], fill_real)
+    np.testing.assert_array_equal(s, ref_s)
+    np.testing.assert_array_equal(i, ref_i)
+
+
+def test_async_server_matches_direct_search():
+    search, data = _index()
+    ref_s, ref_i = search(data.query_patches, data.query_mask,
+                          data.query_salience)
+
+    async def go():
+        srv = AsyncRetrievalServer(
+            search, ServeConfig(max_batch=4, max_wait_ms=5.0))
+        srv.warm_shapes(data.query_patches[0], data.query_mask[0],
+                        data.query_salience[0])
+        outs = await asyncio.gather(*[
+            srv.query(data.query_patches[i], data.query_mask[i],
+                      data.query_salience[i]) for i in range(N_QUERIES)])
+        st = srv.stats()
+        await srv.aclose()
+        return outs, st
+
+    outs, st = asyncio.run(go())
+    for i, (s, ids) in enumerate(outs):
+        np.testing.assert_array_equal(s, np.asarray(ref_s[i]))
+        np.testing.assert_array_equal(ids, np.asarray(ref_i[i]))
+    assert st["n"] == N_QUERIES
+    # every served batch landed on a rung of the max_batch=4 ladder
+    assert set(st["rungs"]) <= {1, 2, 4}
+
+
+def test_stats_survive_concurrent_async_submitters():
+    async def go():
+        srv = AsyncRetrievalServer(
+            _fake_search, ServeConfig(max_batch=8, max_wait_ms=1.0))
+
+        async def client(n):
+            for _ in range(n):
+                await srv.query(np.zeros((4, 16), np.float32),
+                                np.ones(4, bool), np.zeros(4, np.float32))
+
+        await asyncio.gather(*[client(8) for _ in range(4)])
+        st = srv.stats()
+        await srv.aclose()
+        return st
+
+    st = asyncio.run(go())
+    assert st["n"] == 32
+    assert st["qps"] > 0.0
+    assert 0.0 <= st["p50_ms"] <= st["p99_ms"]
+    assert st["mean_batch"] >= 1.0
+    # rung accounting is consistent: occupancies in (0, 1] and the
+    # per-rung occupied slots sum back to the request count
+    total_reqs = sum(round(v["occupancy"] * b * v["batches"])
+                     for b, v in st["rungs"].items())
+    assert total_reqs == 32
+    for b, v in st["rungs"].items():
+        assert 0.0 < v["occupancy"] <= 1.0
+        assert b in padding_ladder(8)
+
+
+def test_close_drains_queued_requests_with_terminal_error():
+    def slow_search(q, qm, qs):
+        time.sleep(0.1)
+        return (np.zeros((q.shape[0], 5)),
+                np.zeros((q.shape[0], 5), np.int64))
+
+    server = RetrievalServer(slow_search,
+                             ServeConfig(max_batch=1, max_wait_ms=0.5))
+    reqs = [server.submit(np.zeros((4, 8)), np.ones(4, bool),
+                          np.zeros(4)) for _ in range(6)]
+    time.sleep(0.05)                    # first batch is inside search_fn
+    t0 = time.perf_counter()
+    server.close()
+    took = time.perf_counter() - t0
+    assert took < 10.0                  # not the 30 s client timeout
+    served = errored = 0
+    for r in reqs:
+        assert r.event.wait(5.0)        # every waiter is released
+        if r.error is not None:
+            assert isinstance(r.error, ServerClosed)
+            errored += 1
+        else:
+            assert r.result is not None
+            served += 1
+    assert served + errored == 6
+    assert errored >= 1                 # queued tail got the terminal error
+    assert served >= 1                  # in-flight batch still delivered
+    # submit after close fails fast with the terminal error, no timeout
+    r = server.submit(np.zeros((4, 8)), np.ones(4, bool), np.zeros(4))
+    assert r.event.wait(1.0) and isinstance(r.error, ServerClosed)
+    server.close()                      # idempotent
+
+
+def test_staging_error_fails_batch_but_not_server():
+    """Two coalesced queries with mismatched Mq can't be stacked: that
+    batch must error out, but the dispatcher survives and later
+    well-formed queries (and aclose) still work."""
+    async def go():
+        srv = AsyncRetrievalServer(
+            _fake_search, ServeConfig(max_batch=4, max_wait_ms=50.0))
+        bad = await asyncio.gather(
+            srv.query(np.zeros((4, 16), np.float32), np.ones(4, bool),
+                      np.zeros(4, np.float32)),
+            srv.query(np.zeros((8, 16), np.float32), np.ones(8, bool),
+                      np.zeros(8, np.float32)),
+            return_exceptions=True)
+        assert any(isinstance(r, Exception) for r in bad)
+        s, ids = await srv.query(np.zeros((4, 16), np.float32),
+                                 np.ones(4, bool), np.zeros(4, np.float32))
+        assert s.shape == (5,) and ids.shape == (5,)
+        await srv.aclose()
+
+    asyncio.run(go())
+
+
+def test_async_query_after_aclose_raises():
+    async def go():
+        srv = AsyncRetrievalServer(_fake_search, ServeConfig(max_batch=2))
+        await srv.query(np.zeros((4, 16), np.float32), np.ones(4, bool),
+                        np.zeros(4, np.float32))
+        await srv.aclose()
+        with pytest.raises(ServerClosed):
+            await srv.query(np.zeros((4, 16), np.float32),
+                            np.ones(4, bool), np.zeros(4, np.float32))
+
+    asyncio.run(go())
+
+
+def test_warm_shapes_precompiles_every_rung():
+    srv = AsyncRetrievalServer(_fake_search, ServeConfig(max_batch=8))
+    srv.warm_shapes(np.zeros((4, 16), np.float32), np.ones(4, bool),
+                    np.zeros(4, np.float32))
+    assert {(b, 4) for b in (1, 2, 4, 8)} <= srv.compiled_shapes
+
+
+def test_single_shape_config_reproduces_v1_padding():
+    """ladder=(max_batch,) pads every batch to the single compiled shape."""
+    server = RetrievalServer(
+        _fake_search,
+        ServeConfig(max_batch=8, max_wait_ms=2.0, ladder=(8,)))
+    reqs = [server.submit(np.zeros((4, 16), np.float32), np.ones(4, bool),
+                          np.zeros(4, np.float32)) for _ in range(3)]
+    for r in reqs:
+        assert r.event.wait(10.0) and r.error is None
+    st = server.stats()
+    assert list(st["rungs"]) == [8]     # stragglers still pay B=8
+    server.close()

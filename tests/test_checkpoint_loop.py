@@ -1,6 +1,5 @@
 """Checkpointing (atomic/async/elastic) + fault-tolerant loop tests."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,4 @@
 """Registry / config-surface tests: the 10 assigned archs x their shapes."""
-import pytest
 
 from repro.configs import registry
 from repro.configs.base import ArchSpec

@@ -1,6 +1,5 @@
 """Index + end-to-end pipeline tests (core/index.py, core/pipeline.py)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

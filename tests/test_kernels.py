@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import quantization as quant
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 SHAPES = [  # (B, Mq, D, N, Md)
     (1, 4, 16, 16, 8),

@@ -1,5 +1,4 @@
 """Serving (continuous batching) + RAG integration tests."""
-import threading
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +47,7 @@ def test_server_stats_empty_returns_zeros():
     server = RetrievalServer(lambda q, qm, qs: (q, q), ServeConfig())
     st = server.stats()
     assert st == {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_batch": 0.0,
-                  "qps": 0.0}
+                  "qps": 0.0, "rungs": {}}
     server.close()
 
 
