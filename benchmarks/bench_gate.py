@@ -23,15 +23,24 @@ import json
 import sys
 
 
-# (json path, direction) per gated metric: "lower" = regression when the
-# normalised value rises above baseline*(1+tol); "higher" = regression when
-# it falls below baseline*(1-tol).
+# (json path, direction, normalise, floor) per gated metric: "lower" =
+# regression when the normalised value rises above baseline*(1+tol);
+# "higher" = regression when it falls below baseline*(1-tol); "floor" =
+# hard quality floor — the current value must be >= the PINNED constant
+# below, with NO tolerance (quality gets no -20% forgiveness). The floor
+# is pinned here, not read from BENCH_baseline.json, so the routine
+# baseline-refresh workflow (copying a smoke run's measured JSON) can
+# never silently tighten it; the baseline field stays informational. 0.70
+# mirrors the tier-1 quantized-flat floor, ~2.6 quanta (1/32 each) below
+# the measured smoke value — codebook-training collapse lands far below.
 GATED = [
-    (("serving", "p50_ms"), "lower", True),
-    (("serving", "p99_ms"), "lower", True),
-    (("serving", "qps"), "higher", True),
-    (("quality", "ndcg_full"), "higher", False),
-    (("quality", "ndcg_hpc"), "higher", False),
+    (("serving", "p50_ms"), "lower", True, None),
+    (("serving", "p99_ms"), "lower", True, None),
+    (("serving", "qps"), "higher", True, None),
+    (("quality", "ndcg_full"), "higher", False, None),
+    (("quality", "ndcg_hpc"), "higher", False, None),
+    (("quality", "hit10_quantized_flat"), "floor", False, 0.70),
+    (("quality", "codebook_inertia"), "lower", False, None),
 ]
 
 
@@ -51,9 +60,11 @@ def compare(current: dict, baseline: dict, tolerance: float):
     lines = [f"calib_ms: baseline {calib_base:.4f}  current {calib_cur:.4f}"
              f"  (speed ratio {speed:.2f})"]
     failures = 0
-    for path, direction, normalise in GATED:
+    for path, direction, normalise, floor in GATED:
         name = ".".join(path)
         cur, base = _get(current, path), _get(baseline, path)
+        if direction == "floor":
+            base = floor              # pinned, never from the baseline file
         if base is None:
             lines.append(f"SKIP {name}: not in baseline")
             continue
@@ -73,14 +84,20 @@ def compare(current: dict, baseline: dict, tolerance: float):
         if direction == "lower":
             ok = cur_n <= base_n * (1.0 + tolerance)
             delta = (cur_n - base_n) / base_n if base_n else 0.0
+            tol_s = f"tol {tolerance:.0%}"
+        elif direction == "floor":
+            ok = cur_n >= base_n
+            delta = (base_n - cur_n) / base_n if base_n else 0.0
+            tol_s = "pinned hard floor, no tolerance"
         else:
             ok = cur_n >= base_n * (1.0 - tolerance)
             delta = (base_n - cur_n) / base_n if base_n else 0.0
+            tol_s = f"tol {tolerance:.0%}"
         tag = "PASS" if ok else "FAIL"
         norm = " (normalised)" if normalise else ""
         lines.append(f"{tag} {name}: baseline {base_n:.4f}  current "
                      f"{cur_n:.4f}{norm}  regression {delta:+.1%} "
-                     f"(tol {tolerance:.0%})")
+                     f"({tol_s})")
         failures += 0 if ok else 1
     return lines, failures
 

@@ -7,6 +7,12 @@ from typing import Callable, Dict
 import jax
 import numpy as np
 
+# Relevance grade that counts as a "target" document (synthetic corpora
+# grade 0..3). The single shared definition for hit@k — the tier-1
+# acceptance test (tests/test_index_pipeline.py) and the CI bench-gate
+# metric (hit10_quantized_flat) must measure the same quantity.
+HIT_RELEVANCE = 2
+
 
 def dcg_at_k(rels: np.ndarray, k: int) -> float:
     rels = np.asarray(rels)[:k]
@@ -47,16 +53,18 @@ def average_precision(ranked_rels: np.ndarray, all_rels: np.ndarray,
 def retrieval_metrics(ids: np.ndarray, relevance: np.ndarray, k: int = 10
                       ) -> Dict[str, float]:
     """ids (Q, >=k) ranked doc ids; relevance (Q, N) graded."""
-    ndcgs, recalls, aps = [], [], []
+    ndcgs, recalls, aps, hits = [], [], [], []
     for qi in range(ids.shape[0]):
         rel_row = np.asarray(relevance[qi])
         ranked = rel_row[np.asarray(ids[qi])]
         ndcgs.append(ndcg_at_k(ranked, rel_row, k))
         recalls.append(recall_at_k(ranked, rel_row, k))
         aps.append(average_precision(ranked[:100], rel_row))
+        hits.append(float((ranked[:k] >= HIT_RELEVANCE).any()))
     return {"ndcg@10": float(np.mean(ndcgs)),
             "recall@10": float(np.mean(recalls)),
-            "map": float(np.mean(aps))}
+            "map": float(np.mean(aps)),
+            "hit@10": float(np.mean(hits))}
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:

@@ -23,6 +23,41 @@ from benchmarks import (kernel_bench, latency, rag_bench, retrieval_quality,
 from benchmarks.common import calibrate_ms, csv_row
 
 
+def _codebook_metrics() -> dict:
+    """Codebook-quality smoke metrics: quantized-flat hit@10 (the seed-gap
+    metric, gated as a hard floor — see bench_gate.py) and the trained
+    codebook's inertia on the valid corpus patches.
+
+    Uses 32 queries (not the 8-query serving spec) so the hit@10 quantum
+    is 1/32 and the gate floor has a real noise margin below it."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import retrieval_metrics
+    from repro.core import quantization as quant
+    from repro.data import synthetic
+    from repro.retrieval import Corpus, HPCConfig, Query, Retriever
+
+    spec = synthetic.CorpusSpec(n_docs=128, n_queries=32, n_patches=8,
+                                n_q_patches=4, dim=16, n_topics=4)
+    data = synthetic.make_retrieval_corpus(jax.random.PRNGKey(0), spec)
+    cfg = HPCConfig(k=32, p=60.0, backend="flat", prune_side="doc",
+                    kmeans_iters=10, rerank=16)
+    r = Retriever(cfg)
+    state = r.build(jax.random.PRNGKey(1),
+                    Corpus(data.doc_patches, data.doc_mask,
+                           data.doc_salience))
+    _, ids = r.search(state, Query(data.query_patches, data.query_mask,
+                                   data.query_salience), k=10)
+    m = retrieval_metrics(np.asarray(ids), np.asarray(data.relevance), 10)
+    d = data.doc_patches.shape[-1]
+    flat = np.asarray(data.doc_patches.reshape(-1, d))
+    valid = np.asarray(data.doc_mask.reshape(-1)).astype(bool)
+    inertia = float(quant.quantization_error(jnp.asarray(flat[valid]),
+                                             state.codebook))
+    return {"hit10_quantized_flat": m["hit@10"], "codebook_inertia": inertia}
+
+
 def smoke(json_path=None) -> int:
     """CI smoke: retrieval quality + storage + serving on tiny configs."""
     from repro.data import synthetic
@@ -31,6 +66,10 @@ def smoke(json_path=None) -> int:
     print("== smoke: retrieval quality (tiny corpus) ==")
     rows = retrieval_quality.run(stress=False, datasets=[("smoke", tiny)])
     assert rows, "smoke retrieval produced no rows"
+    print("== smoke: codebook quality (quantized-flat) ==")
+    cb = _codebook_metrics()
+    print(f"  hit@10={cb['hit10_quantized_flat']:.3f} "
+          f"inertia={cb['codebook_inertia']:.4f}")
     print("== smoke: storage footprint ==")
     storage.run(verbose=False)
     print("== smoke: serving latency (padding ladder, open-loop) ==")
@@ -66,7 +105,8 @@ def smoke(json_path=None) -> int:
         "schema": 1,
         "calib_ms": calib,
         "serving": med,
-        "quality": {"ndcg_full": full["ndcg@10"], "ndcg_hpc": hpc["ndcg@10"]},
+        "quality": {"ndcg_full": full["ndcg@10"], "ndcg_hpc": hpc["ndcg@10"],
+                    **cb},
     }
     if json_path:
         with open(json_path, "w") as f:

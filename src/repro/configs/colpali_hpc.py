@@ -51,7 +51,15 @@ COLPALI_HPC = ArchSpec(
             n_patches=1024,          # 32x32 page grid (ColPali)
             query_len=32),
         hpc=HPCConfig(k=256, p=60.0, prune_side="doc", backend="flat",
-                      rerank=32)),
+                      rerank=32,
+                      # corpus-scale codebook training: best-of-8 restarts,
+                      # 16k-point k-means++ seeding. kmeans_minibatch is
+                      # stochastic mini-batch Lloyd on a single host; on a
+                      # sharded build (mesh=...) it instead bounds the
+                      # streamed E-step to (65536, K) row blocks per device
+                      # (full-batch statistics, bounded memory)
+                      kmeans_restarts=8, kmeans_seed_batch=16384,
+                      kmeans_minibatch=65536)),
     smoke_config=HPCColPaliArch(
         encoder=ColPaliConfig(
             name="colpali-smoke",
@@ -61,7 +69,7 @@ COLPALI_HPC = ArchSpec(
                 qkv_bias=True, q_chunk=16, loss_chunk=16),
             d_patch=24, proj_dim=16, n_patches=16, query_len=8),
         hpc=HPCConfig(k=16, p=60.0, prune_side="doc", backend="flat",
-                      rerank=8, kmeans_iters=5),
+                      rerank=8, kmeans_iters=5, kmeans_restarts=2),
         corpus_docs=256, kept_patches=10, serve_queries=8, top_k=8),
     shapes=COLPALI_SHAPES,
     source="[this paper; ColQwen2.5 backbone = qwen2-1.5b family]",

@@ -94,6 +94,9 @@ class IVFConfig:
     n_probe: int = 8       # clusters scanned per query
     bucket_cap: int = 0    # max docs per bucket (0 = computed from data)
     iters: int = 15        # routing k-means iterations
+    restarts: int = 2      # routing k-means restarts (routing tolerates
+                           # coarser clustering than the codebook, so this
+                           # stays below KMeansConfig's best-of-8 default)
 
 
 class IVFIndex(NamedTuple):
@@ -122,7 +125,8 @@ def build_ivf(key: Array, codes: Array, mask: Array, codebook: Array,
     m = mask[..., None].astype(dec.dtype)
     doc_vec = jnp.sum(dec * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
     cents, _ = quant.kmeans_fit(
-        key, doc_vec, quant.KMeansConfig(k=config.n_list, iters=config.iters))
+        key, doc_vec, quant.KMeansConfig(k=config.n_list, iters=config.iters,
+                                         n_restarts=config.restarts))
     assign_ = quant.assign(doc_vec, cents)                    # (N,)
 
     cap = config.bucket_cap

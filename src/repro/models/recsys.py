@@ -67,13 +67,14 @@ def lookup(tables: List[Array], ids: Array) -> Array:
 # --- paper transfer: K-Means-quantized tables ------------------------------
 
 def quantize_tables(key: Array, tables: List[Array], k: int = 256,
-                    iters: int = 10) -> Dict[str, Any]:
+                    iters: int = 10, restarts: int = 2) -> Dict[str, Any]:
     """Compress each table to (codes uint8, codebook (K, dim))."""
     out = {"codes": [], "codebooks": []}
     for i, t in enumerate(tables):
         kk = jax.random.fold_in(key, i)
         cb, _ = quant.kmeans_fit(
-            kk, t, quant.KMeansConfig(k=min(k, t.shape[0]), iters=iters))
+            kk, t, quant.KMeansConfig(k=min(k, t.shape[0]), iters=iters,
+                                      n_restarts=restarts))
         out["codes"].append(quant.quantize(t, cb))
         out["codebooks"].append(cb)
     return out

@@ -148,11 +148,22 @@ def available_backends() -> Tuple[str, ...]:
 # Shared build stages (identical numerics to the v0 pipeline)
 # ---------------------------------------------------------------------------
 
-def fit_codebook(key: Array, corpus: Corpus, cfg: HPCConfig) -> Array:
+def kmeans_config(cfg: HPCConfig) -> quant.KMeansConfig:
+    """The codebook-training config implied by an HPCConfig."""
+    return quant.KMeansConfig(
+        k=cfg.k, iters=cfg.kmeans_iters, seed_batch=cfg.kmeans_seed_batch,
+        n_restarts=cfg.kmeans_restarts, minibatch=cfg.kmeans_minibatch)
+
+
+def fit_codebook(key: Array, corpus: Corpus, cfg: HPCConfig,
+                 mesh=None) -> Array:
     """Train the K-Means codebook on valid patches only.
 
     Invalid rows are replaced by resampled valid rows so Lloyd sees real
-    data (zero vectors would otherwise form their own cluster).
+    data (zero vectors would otherwise form their own cluster). With a
+    `mesh`, training runs through the sharded k-means
+    (core/distributed.py): points sharded over the corpus axes, per-cluster
+    stats psum-reduced — same seeds and algorithm as the single-host path.
     """
     d = corpus.embeddings.shape[-1]
     flat = corpus.embeddings.reshape(-1, d)
@@ -165,26 +176,37 @@ def fit_codebook(key: Array, corpus: Corpus, cfg: HPCConfig) -> Array:
         valid_idx[jnp.mod(jnp.arange(flat.shape[0]),
                           jnp.maximum(n_valid, 1))])
     train_x = flat[gather_idx]
-    codebook, _ = quant.kmeans_fit(
-        key, train_x, quant.KMeansConfig(k=cfg.k, iters=cfg.kmeans_iters))
+    if mesh is not None:
+        from repro.core import distributed as dist
+        codebook, _ = dist.sharded_kmeans_fit(mesh, key, train_x,
+                                              kmeans_config(cfg))
+    else:
+        codebook, _ = quant.kmeans_fit(key, train_x, kmeans_config(cfg))
     return codebook
 
 
-def encode_corpus(key: Array, corpus: Corpus, cfg: HPCConfig
+def encode_corpus(key: Array, corpus: Corpus, cfg: HPCConfig, mesh=None
                   ) -> Tuple[Array, Array, Array, Array, Array]:
     """Shared offline stages for all code-based backends.
 
     Splits the key exactly like v0 `build_index` (codebook key first, the
     remainder free for the backend's own structure, e.g. IVF routing),
     trains the codebook, quantizes the full corpus (the rerank structure),
-    and applies doc-side pruning for the primary structure.
+    and applies doc-side pruning for the primary structure. With a `mesh`,
+    codebook training and corpus quantization run sharded over the mesh's
+    corpus axes (assignment through the Pallas kernel on TPU devices).
 
     Returns (struct_key, codebook, codes_full, codes, mask).
     """
     k_cb, k_struct = jax.random.split(key)
-    codebook = fit_codebook(k_cb, corpus, cfg)
-    codes_full = quant.quantize(corpus.embeddings, codebook,
-                                code_dtype=code_dtype(cfg.k))       # (N, Md)
+    codebook = fit_codebook(k_cb, corpus, cfg, mesh=mesh)
+    if mesh is not None:
+        from repro.core import distributed as dist
+        codes_full = dist.sharded_quantize(mesh, corpus.embeddings, codebook,
+                                           code_dtype(cfg.k))       # (N, Md)
+    else:
+        codes_full = quant.quantize(corpus.embeddings, codebook,
+                                    code_dtype=code_dtype(cfg.k))   # (N, Md)
     if cfg.prune_side in ("doc", "both"):
         codes, _, mask, _ = pruning.prune_topp_codes(
             codes_full, corpus.salience, corpus.mask, p=cfg.p)
@@ -207,8 +229,10 @@ class IndexBackend:
 
     # -- required -----------------------------------------------------------
 
-    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig
-              ) -> RetrieverState:
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig,
+              mesh=None) -> RetrieverState:
+        """Offline indexing. `mesh` (optional) runs the shared encode
+        stages (codebook fit + corpus quantization) sharded over it."""
         raise NotImplementedError
 
     def search(self, state: RetrieverState, query: Query, *, k: int

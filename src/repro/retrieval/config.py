@@ -48,6 +48,13 @@ class HPCConfig:
     index: Optional[Literal["flat", "ivf"]] = None
     ivf: IVFConfig = dataclasses.field(default_factory=IVFConfig)
     kmeans_iters: int = 25
+    kmeans_restarts: int = 8         # independent codebook fits, best-of-N
+                                     # by inertia (must match the
+                                     # KMeansConfig default for v0 parity)
+    kmeans_seed_batch: int = 4096    # k-means++ seeding subsample;
+                                     # 0 = seed on the full corpus
+    kmeans_minibatch: int = 0        # 0 = full-batch Lloyd; else per-step
+                                     # sample size for corpus-scale N
     rerank: int = 0                  # rerank top-r candidates with unpruned
                                      # quantized maxsim (0 = off)
     backend: Optional[str] = None    # registry key; wins over mode/index

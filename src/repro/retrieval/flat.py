@@ -21,9 +21,10 @@ Array = jax.Array
 @register_backend("flat")
 class FlatBackend(IndexBackend):
 
-    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig
-              ) -> RetrieverState:
-        _, codebook, codes_full, codes, mask = encode_corpus(key, corpus, cfg)
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig,
+              mesh=None) -> RetrieverState:
+        _, codebook, codes_full, codes, mask = encode_corpus(
+            key, corpus, cfg, mesh=mesh)
         return RetrieverState(
             codebook=codebook,
             backend_state=index_mod.build_flat(codes, mask, codebook),

@@ -23,8 +23,10 @@ Array = jax.Array
 class FloatFlatBackend(IndexBackend):
     exact_scores = True
 
-    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig
-              ) -> RetrieverState:
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig,
+              mesh=None) -> RetrieverState:
+        # no codebook to train — `mesh` is accepted for contract parity
+        # (the float corpus shards post-build via Retriever.shard)
         n, _, d = corpus.embeddings.shape
         emb, mask = corpus.embeddings, corpus.mask
         if cfg.prune_side in ("doc", "both"):

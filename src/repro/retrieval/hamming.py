@@ -41,9 +41,10 @@ class HammingState:
 @register_backend("hamming")
 class HammingBackend(IndexBackend):
 
-    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig
-              ) -> RetrieverState:
-        _, codebook, codes_full, codes, mask = encode_corpus(key, corpus, cfg)
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig,
+              mesh=None) -> RetrieverState:
+        _, codebook, codes_full, codes, mask = encode_corpus(
+            key, corpus, cfg, mesh=mesh)
         ham = index_mod.build_hamming(codes, mask, cfg.bits)
         return RetrieverState(
             codebook=codebook,

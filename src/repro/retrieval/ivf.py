@@ -41,10 +41,10 @@ class IVFState:
 @register_backend("ivf")
 class IVFBackend(IndexBackend):
 
-    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig
-              ) -> RetrieverState:
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig,
+              mesh=None) -> RetrieverState:
         k_ivf, codebook, codes_full, codes, mask = encode_corpus(
-            key, corpus, cfg)
+            key, corpus, cfg, mesh=mesh)
         ivf = index_mod.build_ivf(k_ivf, codes, mask, codebook, cfg.ivf)
         return RetrieverState(
             codebook=codebook,

@@ -38,9 +38,24 @@ class Retriever:
 
     # -- offline ------------------------------------------------------------
 
-    def build(self, key: Array, corpus: Corpus) -> RetrieverState:
-        """Offline indexing (paper §III-E1)."""
-        return self.backend.build(key, corpus, self.cfg)
+    def build(self, key: Array, corpus: Corpus, *,
+              mesh: Optional[Mesh] = None) -> RetrieverState:
+        """Offline indexing (paper §III-E1).
+
+        With `mesh`, the shared encode stages run sharded: codebook
+        training through the distributed k-means (points over the mesh's
+        corpus axes, per-cluster stats psum-reduced) and corpus
+        quantization shard-mapped over documents, with nearest-centroid
+        assignment routed through the Pallas kernel on TPU devices. On a
+        1-device mesh the result matches the single-host build within
+        float tolerance; without `mesh` the build is bit-stable (a pure
+        function of key/corpus/config).
+        """
+        if mesh is None:
+            # keep the pre-mesh call shape so out-of-tree backends written
+            # against build(key, corpus, cfg) still work for local builds
+            return self.backend.build(key, corpus, self.cfg)
+        return self.backend.build(key, corpus, self.cfg, mesh=mesh)
 
     # -- online -------------------------------------------------------------
 

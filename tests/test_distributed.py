@@ -41,6 +41,9 @@ print("SHARDED_SEARCH_OK")
 
 @pytest.mark.slow
 def test_sharded_kmeans_matches_local():
+    """The full v2 trainer (k-means++ seeds, Lloyd + empty-cluster repair,
+    best-iterate, restarts) sharded over 8 devices must match the
+    single-host `kmeans_fit` within psum tolerance."""
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import distributed as D, quantization as quant
@@ -48,25 +51,48 @@ from repro.core import distributed as D, quantization as quant
 mesh = jax.make_mesh((8,), ("data",))
 key = jax.random.PRNGKey(0)
 x = jax.random.normal(key, (512, 8))
-c0 = x[:16]
-fit = D.sharded_kmeans_fn(mesh, ("data",), k=16, iters=10)
-c_sh = fit(x, c0)
-
-def local_fit(x, c):
-    for _ in range(10):
-        c, _ = quant._lloyd_step(x, c)
-    return c
-# local Lloyd without the mse recompute ordering: use same step fn
-c_ref = c0
-for _ in range(10):
-    codes = quant.assign(x, c_ref)
-    sums = jax.ops.segment_sum(x, codes, num_segments=16)
-    cnts = jax.ops.segment_sum(jnp.ones(512), codes, num_segments=16)
-    c_ref = jnp.where(cnts[:, None] > 0, sums / jnp.maximum(cnts[:, None], 1.0), c_ref)
+cfg = quant.KMeansConfig(k=16, iters=10, n_restarts=2)
+c_sh, hist_sh = D.sharded_kmeans_fit(mesh, key, x, cfg)
+c_ref, hist_ref = quant.kmeans_fit(key, x, cfg)
 np.testing.assert_allclose(np.asarray(c_sh), np.asarray(c_ref), atol=1e-4)
+np.testing.assert_allclose(np.asarray(hist_sh), np.asarray(hist_ref), atol=1e-4)
+codes_sh = D.sharded_quantize(mesh, x.reshape(64, 8, 8), c_ref, jnp.uint8)
+codes_ref = quant.quantize(x.reshape(64, 8, 8), c_ref)
+assert bool(jnp.all(codes_sh == codes_ref))
 print("SHARDED_KMEANS_OK")
 """)
     assert "SHARDED_KMEANS_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_retriever_build_matches_local():
+    """Retriever.build(mesh=...) across 8 devices: codebook within psum
+    tolerance of the single-host build, identical search answers."""
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.data import synthetic
+from repro.retrieval import Corpus, HPCConfig, Query, Retriever
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+spec = synthetic.CorpusSpec(n_docs=128, n_queries=8, n_patches=8,
+                            n_q_patches=4, dim=16, n_topics=4)
+data = synthetic.make_retrieval_corpus(jax.random.PRNGKey(1), spec)
+cfg = HPCConfig(k=32, p=60.0, backend="flat", prune_side="doc",
+                kmeans_iters=8, rerank=12)
+r = Retriever(cfg)
+corpus = Corpus(data.doc_patches, data.doc_mask, data.doc_salience)
+st_mesh = r.build(jax.random.PRNGKey(2), corpus, mesh=mesh)
+st_local = r.build(jax.random.PRNGKey(2), corpus)
+np.testing.assert_allclose(np.asarray(st_mesh.codebook),
+                           np.asarray(st_local.codebook), atol=1e-4)
+q = Query(data.query_patches, data.query_mask, data.query_salience)
+s_m, i_m = r.search(st_mesh, q, k=5)
+s_l, i_l = r.search(st_local, q, k=5)
+np.testing.assert_allclose(np.asarray(s_m), np.asarray(s_l), atol=1e-4)
+np.testing.assert_array_equal(np.asarray(i_m), np.asarray(i_l))
+print("SHARDED_BUILD_OK")
+""")
+    assert "SHARDED_BUILD_OK" in out
 
 
 @pytest.mark.slow

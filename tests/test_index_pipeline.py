@@ -18,10 +18,11 @@ def corpus():
 
 
 def _target_hit_rate(ids, relevance):
+    from benchmarks.common import HIT_RELEVANCE  # single shared threshold
     hits = 0
     for i in range(ids.shape[0]):
         rel = np.asarray(relevance[i])
-        hits += int((rel[np.asarray(ids[i])] >= 2).any())
+        hits += int((rel[np.asarray(ids[i])] >= HIT_RELEVANCE).any())
     return hits / ids.shape[0]
 
 
