@@ -1,0 +1,148 @@
+"""Candidate-routing comparison: `hnsw` graph walk vs `ivf` centroid
+routing at EQUAL scanned-candidate budgets (paper §IV's HNSW serving
+claim, measured head-to-head against the router it replaces).
+
+Both backends route to a candidate set and score it through the same
+fused `quantized_maxsim` scan, so the scanned-candidate budget is the
+apples-to-apples knob:
+
+    ivf  scans  n_probe * bucket_cap   padded bucket slots
+    hnsw scans  ef_search              beam survivors
+
+Recall@10 is measured against the `flat` backend (the budget-unlimited
+exhaustive scan over the SAME codebook — every config below builds from
+the same key, so the codebooks are bit-identical and only routing
+differs) and is *tie-aware*: a returned document counts as a hit when
+its score clears the oracle's k-th score. Near-duplicate documents
+quantize to identical codes and tie exactly, so naive set-intersection
+recall punishes a router for returning an equally-scored substitute —
+and rewards whichever router happens to share the flat scan's doc-order
+tie-breaking. DocPruner (arXiv:2509.23883) and the storage-efficiency
+study (arXiv:2506.04997) both find candidate-generation quality
+dominates end-to-end nDCG — this table is that quantity.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core.graph import HNSWConfig
+from repro.core.index import IVFConfig
+from repro.data import synthetic
+from repro.retrieval import Corpus, HPCConfig, Query, Retriever
+
+
+def tie_aware_recall_at_k(scores: np.ndarray, ids: np.ndarray,
+                          oracle_scores: np.ndarray, k: int,
+                          rtol: float = 1e-5) -> float:
+    """Fraction of the returned top-k whose score reaches the oracle's
+    k-th score (all backends here share one scoring function, so scores
+    are directly comparable). Sentinel (-1) rows never count."""
+    out = []
+    for qi in range(scores.shape[0]):
+        thresh = np.sort(np.asarray(oracle_scores[qi]))[::-1][k - 1]
+        tol = rtol * max(abs(float(thresh)), 1.0)
+        s = np.asarray(scores[qi][:k])
+        valid = np.asarray(ids[qi][:k]) >= 0
+        out.append(float(np.sum((s >= thresh - tol) & valid)) / k)
+    return float(np.mean(out))
+
+
+def _search_ms(retriever: Retriever, state, queries: Query, k: int) -> float:
+    fn = jax.jit(lambda a, b, c: retriever.search(
+        state, Query(a, b, c), k=k))
+    t = time_fn(fn, queries.embeddings, queries.mask, queries.salience)
+    return t / queries.embeddings.shape[0] * 1e3
+
+
+def run(seed: int = 0, verbose: bool = True,
+        spec: Optional[synthetic.CorpusSpec] = None,
+        n_list: int = 32, n_probe: int = 2, k: int = 10,
+        measure_latency: bool = True) -> List[Dict]:
+    """flat (oracle) vs ivf vs hnsw on one corpus, one shared codebook.
+
+    The hnsw budget is pinned to the ivf budget: ef_search is set to
+    exactly `n_probe * bucket_cap` after the IVF build reports its cap.
+    """
+    if spec is None:
+        spec = synthetic.CorpusSpec(n_docs=1024, n_queries=64, n_patches=16,
+                                    n_q_patches=4, dim=32, n_topics=16,
+                                    dup_per_doc=3)
+    key = jax.random.PRNGKey(seed)
+    data = synthetic.make_retrieval_corpus(key, spec)
+    corpus = Corpus(data.doc_patches, data.doc_mask, data.doc_salience)
+    queries = Query(data.query_patches, data.query_mask, data.query_salience)
+    build_key = jax.random.PRNGKey(seed + 1)
+
+    def cfg_for(backend: str, **kw) -> HPCConfig:
+        # the paper's operating point: doc-side pruning keeps the salient
+        # patches, which also cleans the mean-vector routing representation
+        return HPCConfig(k=64, p=60.0, backend=backend, prune_side="doc",
+                         kmeans_iters=10, **kw)
+
+    # oracle: exhaustive fused scan (budget = N)
+    r_flat = Retriever(cfg_for("flat"))
+    st_flat = r_flat.build(build_key, corpus)
+    oracle_scores, _ = r_flat.search(st_flat, queries, k=k)
+    oracle_scores = np.asarray(oracle_scores)
+
+    r_ivf = Retriever(cfg_for(
+        "ivf", ivf=IVFConfig(n_list=n_list, n_probe=n_probe, iters=8)))
+    st_ivf = r_ivf.build(build_key, corpus)
+    cap = st_ivf.backend_state.index.bucket_codes.shape[1]
+    budget = n_probe * cap
+
+    r_hnsw = Retriever(cfg_for(
+        "hnsw", hnsw=HNSWConfig(m=8, ef_construction=48, ef_search=budget)))
+    st_hnsw = r_hnsw.build(build_key, corpus)
+
+    rows = []
+    for name, r, st, scanned in (
+            ("flat", r_flat, st_flat, spec.n_docs),
+            ("ivf", r_ivf, st_ivf, budget),
+            ("hnsw", r_hnsw, st_hnsw, budget)):
+        scores, ids = r.search(st, queries, k=k)
+        row = {"backend": name, "scanned": scanned,
+               "budget_frac": scanned / spec.n_docs,
+               f"recall@{k}_vs_flat": tie_aware_recall_at_k(
+                   np.asarray(scores), np.asarray(ids), oracle_scores, k)}
+        if measure_latency:
+            row["ms_per_query"] = _search_ms(r, st, queries, k)
+        rows.append(row)
+        if verbose:
+            lat = (f"  {row['ms_per_query']:7.3f} ms/q"
+                   if measure_latency else "")
+            print(f"  {name:6s} scanned={scanned:5d} "
+                  f"({row['budget_frac']:5.1%})  "
+                  f"recall@{k}={row[f'recall@{k}_vs_flat']:.3f}{lat}")
+    return rows
+
+
+def smoke_metrics(seed: int = 0) -> Dict[str, float]:
+    """Tiny-corpus hnsw-vs-ivf metrics for the CI bench gate.
+
+    256 docs, n_list=16 -> cap 32, n_probe=2 -> budget 64 slots (25% of
+    the corpus) for both routers. Gated: the hnsw recall floor, the
+    hnsw-minus-ivf recall margin (>= 0: the graph must meet or beat the
+    centroid router at the equal budget), and hnsw query latency.
+    """
+    spec = synthetic.CorpusSpec(n_docs=256, n_queries=32, n_patches=16,
+                                n_q_patches=4, dim=32, n_topics=8,
+                                dup_per_doc=3)
+    rows = run(seed=seed, verbose=False, spec=spec, n_list=16, n_probe=2)
+    by = {r["backend"]: r for r in rows}
+    return {
+        "hnsw_recall10": by["hnsw"]["recall@10_vs_flat"],
+        "ivf_recall10": by["ivf"]["recall@10_vs_flat"],
+        "hnsw_minus_ivf_recall10": (by["hnsw"]["recall@10_vs_flat"]
+                                    - by["ivf"]["recall@10_vs_flat"]),
+        "hnsw_ms_per_query": by["hnsw"]["ms_per_query"],
+        "scanned_frac": by["hnsw"]["budget_frac"],
+    }
+
+
+if __name__ == "__main__":
+    run()

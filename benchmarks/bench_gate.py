@@ -41,6 +41,14 @@ GATED = [
     (("quality", "ndcg_hpc"), "higher", False, None),
     (("quality", "hit10_quantized_flat"), "floor", False, 0.70),
     (("quality", "codebook_inertia"), "lower", False, None),
+    # hnsw-vs-ivf routing (benchmarks/ann_compare.py, tie-aware recall at
+    # a 25%-of-corpus scanned budget). The 0.90 floor sits ~27 smoke
+    # quanta (1/320 each) below the measured 0.984; the 0.0 margin floor
+    # IS the acceptance criterion — the graph router must never fall
+    # behind the centroid router it replaced at the same budget.
+    (("ann", "hnsw_recall10"), "floor", False, 0.90),
+    (("ann", "hnsw_minus_ivf_recall10"), "floor", False, 0.0),
+    (("ann", "hnsw_ms_per_query"), "lower", True, None),
 ]
 
 

@@ -52,11 +52,17 @@ def average_precision(ranked_rels: np.ndarray, all_rels: np.ndarray,
 
 def retrieval_metrics(ids: np.ndarray, relevance: np.ndarray, k: int = 10
                       ) -> Dict[str, float]:
-    """ids (Q, >=k) ranked doc ids; relevance (Q, N) graded."""
+    """ids (Q, >=k) ranked doc ids; relevance (Q, N) graded.
+
+    Negative ids are the backend sentinel for "no document in this slot"
+    (see IndexBackend.search) and are dropped, not scored — a -1 row must
+    read as a miss, never as document N-1.
+    """
     ndcgs, recalls, aps, hits = [], [], [], []
     for qi in range(ids.shape[0]):
         rel_row = np.asarray(relevance[qi])
-        ranked = rel_row[np.asarray(ids[qi])]
+        ids_q = np.asarray(ids[qi])
+        ranked = rel_row[ids_q[ids_q >= 0]]
         ndcgs.append(ndcg_at_k(ranked, rel_row, k))
         recalls.append(recall_at_k(ranked, rel_row, k))
         aps.append(average_precision(ranked[:100], rel_row))

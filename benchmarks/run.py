@@ -18,8 +18,8 @@ import time
 
 import numpy as np
 
-from benchmarks import (kernel_bench, latency, rag_bench, retrieval_quality,
-                        storage)
+from benchmarks import (ann_compare, kernel_bench, latency, rag_bench,
+                        retrieval_quality, storage)
 from benchmarks.common import calibrate_ms, csv_row
 
 
@@ -70,6 +70,13 @@ def smoke(json_path=None) -> int:
     cb = _codebook_metrics()
     print(f"  hit@10={cb['hit10_quantized_flat']:.3f} "
           f"inertia={cb['codebook_inertia']:.4f}")
+    print("== smoke: candidate routing (hnsw vs ivf, equal budget) ==")
+    ann = ann_compare.smoke_metrics()
+    print(f"  hnsw recall@10={ann['hnsw_recall10']:.3f} "
+          f"ivf recall@10={ann['ivf_recall10']:.3f} "
+          f"(margin {ann['hnsw_minus_ivf_recall10']:+.3f} at "
+          f"{ann['scanned_frac']:.0%} scanned)  "
+          f"hnsw {ann['hnsw_ms_per_query']:.3f} ms/q")
     print("== smoke: storage footprint ==")
     storage.run(verbose=False)
     print("== smoke: serving latency (padding ladder, open-loop) ==")
@@ -107,6 +114,7 @@ def smoke(json_path=None) -> int:
         "serving": med,
         "quality": {"ndcg_full": full["ndcg@10"], "ndcg_hpc": hpc["ndcg@10"],
                     **cb},
+        "ann": ann,
     }
     if json_path:
         with open(json_path, "w") as f:
@@ -147,6 +155,18 @@ def main(argv=None) -> int:
     dt = time.perf_counter() - t0
     r32 = [r for r in s_rows if "PQ-16" in r["config"]][0]
     csv.append(csv_row("storage", dt * 1e6, f"pq16_ratio={r32['ratio']:.1f}x"))
+
+    print("== Candidate routing: hnsw graph vs ivf centroids ==")
+    t0 = time.perf_counter()
+    a_rows = ann_compare.run()
+    dt = time.perf_counter() - t0
+    a_hnsw = [r for r in a_rows if r["backend"] == "hnsw"][0]
+    a_ivf = [r for r in a_rows if r["backend"] == "ivf"][0]
+    csv.append(csv_row(
+        "ann_compare", dt * 1e6,
+        f"hnsw_recall={a_hnsw['recall@10_vs_flat']:.3f};"
+        f"ivf_recall={a_ivf['recall@10_vs_flat']:.3f};"
+        f"scanned={a_hnsw['budget_frac']:.2f}"))
 
     print("== Table IV: query latency / throughput ==")
     t0 = time.perf_counter()

@@ -33,6 +33,25 @@ Array = jax.Array
 
 
 # ---------------------------------------------------------------------------
+# Shared routing-vector helpers
+# ---------------------------------------------------------------------------
+
+def mean_pool(emb: Array, mask: Array) -> Array:
+    """Masked mean over the patch axis: (..., M, D), (..., M) -> (..., D)."""
+    m = mask[..., None].astype(emb.dtype)
+    return jnp.sum(emb * m, axis=-2) / jnp.maximum(jnp.sum(m, axis=-2), 1.0)
+
+
+def doc_mean_vectors(codes: Array, mask: Array, codebook: Array) -> Array:
+    """Document routing vectors: mean of decoded (reconstructed) patches.
+
+    The representation both routing structures (IVF buckets, HNSW graph)
+    are built over — (N, Md) codes -> (N, D) float vectors.
+    """
+    return mean_pool(quant.decode(codes, codebook), mask)
+
+
+# ---------------------------------------------------------------------------
 # Flat index (quantized corpus by default)
 # ---------------------------------------------------------------------------
 
@@ -97,6 +116,8 @@ class IVFConfig:
     restarts: int = 2      # routing k-means restarts (routing tolerates
                            # coarser clustering than the codebook, so this
                            # stays below KMeansConfig's best-of-8 default)
+    max_drop_rate: float = 0.01  # build fails above this bucket-overflow
+                                 # drop fraction (IVFBackend.build checks)
 
 
 class IVFIndex(NamedTuple):
@@ -113,17 +134,17 @@ def build_ivf(key: Array, codes: Array, mask: Array, codebook: Array,
     """Bucket documents by the routing cluster of their mean decoded patch.
 
     Padded-dense bucket layout: (n_list, cap, ...). cap defaults to
-    2x the mean load (overflowing docs spill to their 2nd-nearest bucket's
-    free slots would complicate things; instead docs beyond cap are dropped
-    from that bucket and counted — build asserts the drop rate is < 1%).
+    2x the mean load (overflowing docs spilling to their 2nd-nearest
+    bucket's free slots would complicate things; instead docs beyond cap
+    are dropped from that bucket and counted). `ivf_drop_rate` measures
+    the dropped fraction; `IVFBackend.build` enforces it against
+    `config.max_drop_rate` (build_ivf itself stays a pure structure
+    builder).
     """
     n, md = codes.shape
     if doc_ids is None:
         doc_ids = jnp.arange(n, dtype=jnp.int32)
-    # Document-level representation: mean of decoded (reconstructed) patches.
-    dec = quant.decode(codes, codebook)                       # (N, Md, D)
-    m = mask[..., None].astype(dec.dtype)
-    doc_vec = jnp.sum(dec * m, axis=1) / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    doc_vec = doc_mean_vectors(codes, mask, codebook)         # (N, D)
     cents, _ = quant.kmeans_fit(
         key, doc_vec, quant.KMeansConfig(k=config.n_list, iters=config.iters,
                                          n_restarts=config.restarts))
@@ -138,8 +159,10 @@ def build_ivf(key: Array, codes: Array, mask: Array, codebook: Array,
     # rank within cluster
     same = (sorted_cluster[:, None] == jnp.arange(config.n_list)[None, :])
     rank_in_cluster = jnp.cumsum(same, axis=0)[jnp.arange(n), sorted_cluster] - 1
-    keep = rank_in_cluster < cap
-    slot = jnp.where(keep, rank_in_cluster, cap - 1)
+    # overflowing docs (rank >= cap) scatter to the out-of-bounds slot
+    # `cap` and are discarded by mode="drop" — routing them to a real slot
+    # would clobber the doc legitimately stored there
+    slot = jnp.where(rank_in_cluster < cap, rank_in_cluster, cap)
 
     bucket_codes = jnp.zeros((config.n_list, cap, md), codes.dtype)
     bucket_mask = jnp.zeros((config.n_list, cap, md), bool)
@@ -148,14 +171,10 @@ def build_ivf(key: Array, codes: Array, mask: Array, codebook: Array,
 
     sc, sl = sorted_cluster, slot
     src = order
-    bucket_codes = bucket_codes.at[sc, sl].set(
-        jnp.where(keep[:, None], codes[src], bucket_codes[sc, sl]))
-    bucket_mask = bucket_mask.at[sc, sl].set(
-        jnp.where(keep[:, None], mask[src], bucket_mask[sc, sl]))
-    bucket_valid = bucket_valid.at[sc, sl].set(
-        jnp.where(keep, True, bucket_valid[sc, sl]))
-    bucket_ids = bucket_ids.at[sc, sl].set(
-        jnp.where(keep, doc_ids[src], bucket_ids[sc, sl]))
+    bucket_codes = bucket_codes.at[sc, sl].set(codes[src], mode="drop")
+    bucket_mask = bucket_mask.at[sc, sl].set(mask[src], mode="drop")
+    bucket_valid = bucket_valid.at[sc, sl].set(True, mode="drop")
+    bucket_ids = bucket_ids.at[sc, sl].set(doc_ids[src], mode="drop")
 
     return IVFIndex(cents, bucket_codes, bucket_mask, bucket_valid,
                     bucket_ids, codebook)
@@ -172,12 +191,20 @@ def search_ivf(index: IVFIndex, q: Array, q_mask: Array, *, n_probe: int,
                k: int) -> Tuple[Array, Array]:
     """Route to n_probe buckets, fused-scan them, global top-k.
 
-    Returns (scores (B, k), doc_ids (B, k)); ids are -1 for empty slots.
+    Returns (scores (B, k), doc_ids (B, k)). Sentinel contract: when the
+    probed buckets hold fewer than k valid documents, the tail rows carry
+    doc_id -1 with NEG_INF scores — callers must ignore `id < 0` rows
+    (see IndexBackend.search).
     """
     b = q.shape[0]
-    qm = q_mask[..., None].astype(q.dtype)
-    q_vec = jnp.sum(q * qm, axis=1) / jnp.maximum(jnp.sum(qm, axis=1), 1.0)
-    route = q_vec @ index.routing_centroids.T                 # (B, n_list)
+    q_vec = mean_pool(q, q_mask)                              # (B, D)
+    # Route by *negative squared L2* to the routing centroids — the same
+    # metric `quant.assign` bucketed documents with at build time. v0
+    # routed by max inner product, which disagrees with L2-nearest for
+    # unnormalized vectors, so queries probed the wrong buckets. ||q||^2
+    # is constant per query, so 2<q,c> - ||c||^2 preserves the ordering.
+    route = (2.0 * (q_vec @ index.routing_centroids.T)
+             - jnp.sum(index.routing_centroids ** 2, axis=-1)[None, :])
     _, probe = jax.lax.top_k(route, n_probe)                  # (B, n_probe)
 
     cand_codes = index.bucket_codes[probe]      # (B, n_probe, cap, Md)
@@ -196,6 +223,14 @@ def search_ivf(index: IVFIndex, q: Array, q_mask: Array, *, n_probe: int,
                                    index.codebook)[0]
     scores = jax.vmap(score_one)(q, q_mask, cand_codes, cand_mask)
     scores = jnp.where(cand_valid, scores, li.NEG_INF)
+    if scores.shape[1] < k:
+        # candidate pool smaller than k: honour the sentinel contract
+        # (pad with -1/NEG_INF rows) instead of failing top_k
+        pad = k - scores.shape[1]
+        scores = jnp.concatenate(
+            [scores, jnp.full((b, pad), li.NEG_INF, scores.dtype)], axis=1)
+        cand_ids = jnp.concatenate(
+            [cand_ids, jnp.full((b, pad), -1, cand_ids.dtype)], axis=1)
     top_s, top_i = jax.lax.top_k(scores, k)
     return top_s, jnp.take_along_axis(cand_ids, top_i, axis=1)
 

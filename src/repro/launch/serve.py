@@ -5,7 +5,8 @@ server (power-of-two padding ladder).
   PYTHONPATH=src python -m repro.launch.serve --n-docs 4096 --queries 256 \
       --backend flat --k 256 --p 60
 
-`--backend` names a registry backend (float_flat / flat / ivf / hamming);
+`--backend` names a registry backend (float_flat / flat / ivf / hnsw /
+hamming);
 the deprecated `--mode`/`--index` pair is still accepted. `--rate-qps`
 switches from closed-loop (submit everything at once) to an open-loop
 Poisson arrival process; `--single-shape` disables the padding ladder

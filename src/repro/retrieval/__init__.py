@@ -10,6 +10,7 @@ Built-in backends (one module each — the template for new ones):
   float_flat — uncompressed exhaustive MaxSim (ColPali-Full baseline)
   flat       — exhaustive fused ADC scan over quantized codes
   ivf        — centroid routing over padded-dense buckets
+  hnsw       — layered small-world graph routing (beam search)
   hamming    — binary codes + popcount scan
 
 See docs/api.md for the `IndexBackend` contract.
@@ -29,4 +30,5 @@ from repro.retrieval.config import HPCConfig  # noqa: F401
 from repro.retrieval.retriever import Retriever  # noqa: F401
 
 # importing the backend modules installs them in the registry
-from repro.retrieval import flat, float_flat, hamming, ivf  # noqa: E402,F401
+from repro.retrieval import (flat, float_flat, hamming,  # noqa: E402,F401
+                             hnsw, ivf)

@@ -126,7 +126,8 @@ def _ensure_builtin_backends():
     lazy hook covers callers that imported only a submodule (e.g. the
     `repro.core.pipeline` compat shim during `repro.core` package init).
     """
-    from repro.retrieval import flat, float_flat, hamming, ivf  # noqa: F401
+    from repro.retrieval import (flat, float_flat, hamming,  # noqa: F401
+                                 hnsw, ivf)
 
 
 def get_backend(name: str) -> "IndexBackend":
@@ -237,10 +238,29 @@ class IndexBackend:
 
     def search(self, state: RetrieverState, query: Query, *, k: int
                ) -> Tuple[Array, Array]:
+        """Candidate search -> (scores (B, k), doc_ids (B, k)).
+
+        Sentinel contract: a backend whose structure can surface fewer
+        than k valid documents (ivf with sparse probed buckets, hnsw with
+        a beam smaller than k reachable nodes) MUST fill the tail rows
+        with doc_id -1 and NEG_INF scores. Consumers — the facade rerank,
+        benchmarks, hit/recall accounting — must ignore `id < 0` rows
+        rather than treating them as real documents.
+        """
         raise NotImplementedError
 
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         raise NotImplementedError
+
+    # -- diagnostics --------------------------------------------------------
+
+    def build_stats(self, state: RetrieverState) -> Dict[str, float]:
+        """Structure-quality stats of a built index (may sync to host).
+
+        Backends override to expose what their build dropped or skewed
+        (e.g. `ivf` reports its bucket-overflow drop rate). Default: {}.
+        """
+        return {}
 
     # -- sharding -----------------------------------------------------------
 

@@ -13,6 +13,7 @@ import warnings
 from typing import Literal, Optional
 
 from repro.core import binary as binary_mod
+from repro.core.graph import HNSWConfig
 from repro.core.index import IVFConfig
 
 # (mode, index) -> backend name; the old union dispatch, now a table.
@@ -24,11 +25,14 @@ _MODE_INDEX_TO_BACKEND = {
     ("binary", "flat"): "hamming",       # v0 ignored `index` for binary
     ("binary", "ivf"): "hamming",
 }
-# backend name -> canonical (mode, index) for old readers.
+# backend name -> canonical (mode, index) for old readers. `hnsw` maps to
+# ("quantized", "ivf") — the nearest v0 spelling (a quantized routing
+# index); the deprecated mode/index pair can never *produce* hnsw.
 _BACKEND_TO_MODE_INDEX = {
     "float_flat": ("float", "flat"),
     "flat": ("quantized", "flat"),
     "ivf": ("quantized", "ivf"),
+    "hnsw": ("quantized", "ivf"),
     "hamming": ("binary", "flat"),
 }
 
@@ -47,6 +51,7 @@ class HPCConfig:
     mode: Optional[Literal["float", "quantized", "binary"]] = None
     index: Optional[Literal["flat", "ivf"]] = None
     ivf: IVFConfig = dataclasses.field(default_factory=IVFConfig)
+    hnsw: HNSWConfig = dataclasses.field(default_factory=HNSWConfig)
     kmeans_iters: int = 25
     kmeans_restarts: int = 8         # independent codebook fits, best-of-N
                                      # by inertia (must match the

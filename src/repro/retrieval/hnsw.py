@@ -1,0 +1,105 @@
+"""`hnsw` backend: layered small-world graph routing (paper §IV).
+
+The graph (core/graph.py) replaces routing only: it walks the mean
+decoded-patch vectors to `ef_search` candidate documents, which are then
+scored through the same fused `quantized_maxsim` scan as `ivf` — so the
+two backends compare head-to-head at equal scanned-candidate budgets
+(`ef_search` vs `n_probe * bucket_cap`). `ef_search` is a *static*
+search knob carried as pytree aux data, like IVF's `n_probe`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph as graph_mod
+from repro.retrieval.base import (Corpus, IndexBackend, Query,
+                                  RetrieverState, encode_corpus,
+                                  register_backend)
+from repro.retrieval.config import HPCConfig
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HNSWState:
+    """HNSWIndex + the static ef_search knob (aux data, not a leaf)."""
+
+    index: graph_mod.HNSWIndex
+    ef_search: int
+
+    def tree_flatten(self):
+        return (self.index,), self.ef_search
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+@register_backend("hnsw")
+class HNSWBackend(IndexBackend):
+
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig,
+              mesh=None) -> RetrieverState:
+        k_graph, codebook, codes_full, codes, mask = encode_corpus(
+            key, corpus, cfg, mesh=mesh)
+        hn = graph_mod.build_hnsw(k_graph, codes, mask, codebook, cfg.hnsw)
+        return RetrieverState(
+            codebook=codebook,
+            backend_state=HNSWState(hn, cfg.hnsw.ef_search),
+            rerank_codes=codes_full,
+            rerank_mask=corpus.mask)
+
+    def search(self, state: RetrieverState, query: Query, *, k: int
+               ) -> Tuple[Array, Array]:
+        s = state.backend_state
+        return graph_mod.search_hnsw(s.index, query.embeddings, query.mask,
+                                     ef_search=s.ef_search, k=k)
+
+    def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
+        ix = state.backend_state.index
+        cb = state.codebook
+        graph_bytes = (ix.neighbors.size * ix.neighbors.dtype.itemsize
+                       + ix.doc_vecs.size * ix.doc_vecs.dtype.itemsize)
+        return {"payload": ix.codes.size * ix.codes.dtype.itemsize,
+                "graph": graph_bytes,
+                "codebook": cb.size * cb.dtype.itemsize}
+
+    def build_stats(self, state: RetrieverState) -> Dict[str, float]:
+        ix = state.backend_state.index
+        degree = jnp.sum(ix.neighbors[0] >= 0, axis=-1)
+        return {"mean_degree_l0": float(jnp.mean(degree)),
+                "levels": int(ix.neighbors.shape[0]),
+                "entry_level": int(ix.node_level[ix.entry])}
+
+    def _state_aux(self, state: RetrieverState):
+        return state.backend_state.ef_search
+
+    def state_template(self, aux) -> RetrieverState:
+        return RetrieverState(
+            0, HNSWState(graph_mod.HNSWIndex(0, 0, 0, 0, 0, 0, 0, 0), aux),
+            0, 0)
+
+    def shard_specs(self, state: RetrieverState):
+        # The graph walk needs global adjacency + routing vectors, so the
+        # graph itself replicates; the scan payload (codes) and the rerank
+        # corpus shard over the corpus axis like every other backend.
+        hnsw_specs = graph_mod.HNSWIndex(
+            doc_vecs=(None, None),
+            neighbors=(None, None, None),
+            entry=(),
+            node_level=(None,),
+            codes=("corpus", None),
+            mask=("corpus", None),
+            doc_ids=("corpus",),
+            codebook=(None, None))
+        return RetrieverState(
+            codebook=(None, None),
+            backend_state=HNSWState(hnsw_specs,
+                                    state.backend_state.ef_search),
+            rerank_codes=("corpus", None),
+            rerank_mask=("corpus", None))

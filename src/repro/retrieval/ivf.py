@@ -9,6 +9,7 @@ routing centroids with one matmul and fused-scans only `n_probe` buckets.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Tuple
 
 import jax
@@ -46,6 +47,21 @@ class IVFBackend(IndexBackend):
         k_ivf, codebook, codes_full, codes, mask = encode_corpus(
             key, corpus, cfg, mesh=mesh)
         ivf = index_mod.build_ivf(k_ivf, codes, mask, codebook, cfg.ivf)
+        # Enforce the bucket-overflow contract: docs beyond bucket_cap are
+        # silently absent from the primary structure, which reads as a
+        # recall loss, not an error — so the build fails loudly instead.
+        n_docs = corpus.embeddings.shape[0]
+        drop = index_mod.ivf_drop_rate(ivf, n_docs)
+        if drop > cfg.ivf.max_drop_rate:
+            raise ValueError(
+                f"IVF bucket overflow dropped {drop:.2%} of {n_docs} docs "
+                f"(> max_drop_rate={cfg.ivf.max_drop_rate:.2%}); raise "
+                "bucket_cap/n_list or rebalance the routing clustering")
+        if drop > 0:
+            warnings.warn(
+                f"IVF bucket overflow dropped {drop:.2%} of {n_docs} docs "
+                f"(within max_drop_rate={cfg.ivf.max_drop_rate:.2%})",
+                stacklevel=2)
         return RetrieverState(
             codebook=codebook,
             backend_state=IVFState(ivf, cfg.ivf.n_probe),
@@ -63,6 +79,13 @@ class IVFBackend(IndexBackend):
         cb = state.codebook
         return {"payload": codes.size * codes.dtype.itemsize,
                 "codebook": cb.size * cb.dtype.itemsize}
+
+    def build_stats(self, state: RetrieverState) -> Dict[str, float]:
+        ix = state.backend_state.index
+        n_docs = state.rerank_codes.shape[0]
+        return {"ivf_drop_rate": index_mod.ivf_drop_rate(ix, n_docs),
+                "n_list": int(ix.bucket_valid.shape[0]),
+                "bucket_cap": int(ix.bucket_valid.shape[1])}
 
     def _state_aux(self, state: RetrieverState):
         return state.backend_state.n_probe

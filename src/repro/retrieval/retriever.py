@@ -108,6 +108,15 @@ class Retriever:
         """
         return self.backend.storage_bytes(state)
 
+    def build_stats(self, state: RetrieverState) -> Dict[str, float]:
+        """Structure-quality stats of a built index (backend-defined).
+
+        `ivf` reports its bucket-overflow drop rate (enforced against
+        `IVFConfig.max_drop_rate` at build time), `hnsw` its realised
+        level-0 degree and entry level; flat scans have nothing to report.
+        """
+        return self.backend.build_stats(state)
+
     # -- persistence --------------------------------------------------------
 
     def save(self, path: str, state: RetrieverState) -> str:

@@ -22,7 +22,9 @@ def _target_hit_rate(ids, relevance):
     hits = 0
     for i in range(ids.shape[0]):
         rel = np.asarray(relevance[i])
-        hits += int((rel[np.asarray(ids[i])] >= HIT_RELEVANCE).any())
+        row = np.asarray(ids[i])
+        row = row[row >= 0]       # -1 = "no document" sentinel, not doc N-1
+        hits += int((rel[row] >= HIT_RELEVANCE).any())
     return hits / ids.shape[0]
 
 
@@ -104,6 +106,131 @@ def test_ivf_probes_subset_but_recovers(corpus):
                                atol=1e-3)
     agree = float(np.mean(np.asarray(ids_ivf) == np.asarray(ids_flat)))
     assert agree > 0.5
+
+
+def test_ivf_routing_metric_matches_build():
+    """Regression (metric mismatch): queries must route by the same L2
+    metric documents were bucketed with. Unnormalized centroids where max
+    inner product and L2-nearest disagree: c0=(10,0) wins the dot product
+    against q=(0.5,0.9), but c1=(0,1) is L2-nearest. The query's true
+    match sits in c1's bucket — MIP routing (the v0 bug) probed c0."""
+    import jax.numpy as jnp
+    index = idx.IVFIndex(
+        routing_centroids=jnp.array([[10.0, 0.0], [0.0, 1.0]]),
+        bucket_codes=jnp.array([[[1]], [[0]]], jnp.uint8),  # c0 holds doc 1
+        bucket_mask=jnp.ones((2, 1, 1), bool),
+        bucket_valid=jnp.ones((2, 1), bool),
+        bucket_doc_ids=jnp.array([[1], [0]], jnp.int32),
+        codebook=jnp.array([[0.5, 0.9], [10.0, 0.0]]))
+    q = jnp.array([[[0.5, 0.9]]])
+    q_mask = jnp.ones((1, 1), bool)
+    _, ids = idx.search_ivf(index, q, q_mask, n_probe=1, k=1)
+    assert int(ids[0, 0]) == 0   # doc 0 (decodes to q) via the L2 bucket
+
+
+def test_ivf_full_probe_bit_consistent_with_flat():
+    """Acceptance regression: at n_probe == n_list (every bucket probed)
+    the IVF ranking is bit-consistent with the flat exhaustive scan —
+    the score vectors are bit-identical, and the returned ids agree
+    exactly up to permutation *within* exactly-tied score groups (ADC
+    scores are K table values max-reduced per patch, so distinct docs
+    can tie bit-exactly; the two scans enumerate candidates in different
+    orders, which is the only freedom ties leave)."""
+    import jax.numpy as jnp
+    from repro.retrieval import Corpus, Query, Retriever
+    key = jax.random.PRNGKey(4)
+    k1, k2 = jax.random.split(key)
+    corpus_ = Corpus(jax.random.normal(k1, (128, 12, 24)),
+                     jnp.ones((128, 12), bool), jnp.ones((128, 12)))
+    queries = Query(jax.random.normal(k2, (16, 4, 24)),
+                    jnp.ones((16, 4), bool), jnp.ones((16, 4)))
+    base = dict(k=64, p=100.0, prune_side="none", kmeans_iters=8)
+    cfg_ivf = pipe.HPCConfig(
+        backend="ivf", ivf=idx.IVFConfig(n_list=8, n_probe=8, iters=8,
+                                         bucket_cap=128), **base)
+    cfg_flat = pipe.HPCConfig(backend="flat", **base)
+    bk = jax.random.PRNGKey(5)
+    s_i, i_i = Retriever(cfg_ivf).search(
+        Retriever(cfg_ivf).build(bk, corpus_), queries, k=10)
+    s_f, i_f = Retriever(cfg_flat).search(
+        Retriever(cfg_flat).build(bk, corpus_), queries, k=10)
+    s_i, i_i = np.asarray(s_i), np.asarray(i_i)
+    s_f, i_f = np.asarray(s_f), np.asarray(i_f)
+    np.testing.assert_array_equal(s_i, s_f)      # ranked scores bit-equal
+    for q in range(s_f.shape[0]):
+        # Tie groups fully inside the top-k must hold the same id sets.
+        # A group tied exactly AT the k-th score may straddle the cut —
+        # either member is a correct answer there, and the bit-equal
+        # score rows above already pin that slot's score.
+        for s in np.unique(s_f[q]):
+            if s == s_f[q, -1]:
+                continue
+            grp = s_f[q] == s
+            np.testing.assert_array_equal(np.sort(i_i[q][grp]),
+                                          np.sort(i_f[q][grp]))
+
+
+def test_ivf_drop_rate_enforced(corpus):
+    """Regression: the promised drop-rate check actually runs at build."""
+    from repro.retrieval import Corpus, Retriever
+    corpus_ = Corpus(corpus.doc_patches, corpus.doc_mask,
+                     corpus.doc_salience)
+    cfg = pipe.HPCConfig(k=32, p=100.0, backend="ivf", prune_side="none",
+                         kmeans_iters=5,
+                         ivf=idx.IVFConfig(n_list=4, n_probe=2, iters=5,
+                                           bucket_cap=8))
+    with pytest.raises(ValueError, match="bucket overflow"):
+        Retriever(cfg).build(jax.random.PRNGKey(6), corpus_)
+    # a healthy build reports its (zero) drop rate through build_stats
+    ok = pipe.HPCConfig(k=32, p=100.0, backend="ivf", prune_side="none",
+                        kmeans_iters=5,
+                        ivf=idx.IVFConfig(n_list=8, n_probe=4, iters=5))
+    r = Retriever(ok)
+    stats = r.build_stats(r.build(jax.random.PRNGKey(6), corpus_))
+    assert stats["ivf_drop_rate"] <= ok.ivf.max_drop_rate
+
+
+def test_ivf_overflow_scatter_preserves_kept_docs():
+    """Regression: an overflowing doc must be discarded, not scattered
+    onto slot cap-1 where it clobbers the doc legitimately stored there
+    (16 identical docs into one 8-slot bucket must keep exactly 8)."""
+    import jax.numpy as jnp
+    codes = jnp.zeros((16, 4), jnp.uint8)      # 16 identical docs
+    mask = jnp.ones((16, 4), bool)
+    codebook = jnp.ones((8, 8), jnp.float32)
+    cfg = idx.IVFConfig(n_list=2, n_probe=1, iters=2, restarts=1,
+                        bucket_cap=8)
+    index = idx.build_ivf(jax.random.PRNGKey(0), codes, mask, codebook, cfg)
+    assert int(np.asarray(index.bucket_valid).sum()) == 8   # == cap, not 7
+    assert idx.ivf_drop_rate(index, 16) == pytest.approx(0.5)
+    stored = np.asarray(index.bucket_doc_ids)
+    assert sorted(stored[stored >= 0].tolist()) == list(range(8))
+
+
+def test_ivf_sentinel_ids_masked(corpus):
+    """Regression: slots beyond the probed buckets' contents are -1 ids
+    with NEG_INF scores, and hit accounting ignores them."""
+    from repro.core import late_interaction as li
+    from repro.retrieval import Corpus, Query, Retriever
+    spec = synthetic.CorpusSpec(n_docs=32, n_queries=8, n_patches=8,
+                                n_q_patches=4, dim=16, n_topics=4,
+                                dup_per_doc=1)
+    data = synthetic.make_retrieval_corpus(jax.random.PRNGKey(7), spec)
+    cfg = pipe.HPCConfig(k=16, p=100.0, backend="ivf", prune_side="none",
+                         kmeans_iters=5,
+                         ivf=idx.IVFConfig(n_list=8, n_probe=1, iters=5))
+    r = Retriever(cfg)
+    state = r.build(jax.random.PRNGKey(8),
+                    Corpus(data.doc_patches, data.doc_mask,
+                           data.doc_salience))
+    # one probed bucket holds far fewer than k=16 docs
+    scores, ids = r.search(state, Query(data.query_patches, data.query_mask,
+                                        data.query_salience), k=16)
+    scores, ids = np.asarray(scores), np.asarray(ids)
+    assert (ids < 0).any()                       # sentinel rows exist
+    assert np.all(scores[ids < 0] <= li.NEG_INF / 2)
+    hit = _target_hit_rate(ids, data.relevance)  # must not index with -1
+    assert 0.0 <= hit <= 1.0
 
 
 def test_rerank_never_hurts_target_rank(corpus):

@@ -170,7 +170,8 @@ def _queries(data):
 # ---------------------------------------------------------------------------
 
 def test_registry_resolves_all_backends():
-    assert available_backends() == ("flat", "float_flat", "hamming", "ivf")
+    assert available_backends() == ("flat", "float_flat", "hamming", "hnsw",
+                                    "ivf")
     for name in available_backends():
         b = get_backend(name)
         assert b.name == name
@@ -178,8 +179,8 @@ def test_registry_resolves_all_backends():
 
 
 def test_registry_unknown_backend_raises():
-    with pytest.raises(KeyError, match="hnsw"):
-        get_backend("hnsw")
+    with pytest.raises(KeyError, match="scann"):
+        get_backend("scann")
 
 
 def test_code_dtype_boundary():
