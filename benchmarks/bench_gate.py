@@ -49,6 +49,14 @@ GATED = [
     (("ann", "hnsw_recall10"), "floor", False, 0.90),
     (("ann", "hnsw_minus_ivf_recall10"), "floor", False, 0.0),
     (("ann", "hnsw_ms_per_query"), "lower", True, None),
+    # streaming flat scan (benchmarks/kernel_bench.flat_scan_metrics —
+    # the wired search_flat path through core/scan.py): per-query
+    # latency and corpus sweep throughput, both calib-normalised. The
+    # two derive from one timing (docs/sec = n_docs*1000/ms_per_query at
+    # pinned n_docs) so they fail together — both are gated because both
+    # are reported headline numbers; treat them as one signal.
+    (("scan", "flat_scan_ms_per_query"), "lower", True, None),
+    (("scan", "flat_scan_docs_per_sec"), "higher", True, None),
 ]
 
 

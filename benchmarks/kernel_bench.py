@@ -2,7 +2,7 @@
 
 On CPU the Pallas interpret path is Python-slow, so the measured comparison
 is ref (ADC table-gather) vs decode-then-matmul vs float scan — the HBM-
-traffic argument (DESIGN.md §2) is reported analytically per variant and
+traffic argument (docs/design.md §2) is reported analytically per variant and
 verified against the dry-run roofline terms for the colpali serve cell.
 """
 from __future__ import annotations
@@ -15,6 +15,41 @@ import jax.numpy as jnp
 from benchmarks.common import time_fn
 from repro.core import late_interaction as li
 from repro.core import quantization as quant
+
+
+def flat_scan_metrics(n_docs: int = 4096, block_docs: int = 256,
+                      verbose: bool = True) -> dict:
+    """Wired-path timing of the streaming flat scan (core/scan.py).
+
+    Times `index.search_flat` — the exact function every flat query
+    serves through, blocked score+top-k fusion included — and reports
+    per-query latency plus corpus sweep throughput. Gated by
+    benchmarks/bench_gate.py (calib-normalised +-20%).
+    """
+    from repro.core import index as index_mod
+    from repro.core.scan import ScanConfig
+
+    B, Mq, D, Md, K = 8, 32, 128, 32, 256
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, Mq, D))
+    cb = jax.random.normal(ks[1], (K, D))
+    codes = jax.random.randint(ks[2], (n_docs, Md), 0, K).astype(jnp.uint8)
+    qm = jnp.ones((B, Mq), bool)
+    dm = jax.random.uniform(ks[3], (n_docs, Md)) > 0.1
+    ix = index_mod.build_flat(codes, dm, cb)
+    scan = ScanConfig(block_docs=block_docs, impl="auto")
+
+    t = time_fn(lambda: index_mod.search_flat(ix, q, qm, k=10, scan=scan))
+    ms_per_query = t * 1e3 / B
+    docs_per_sec = n_docs * B / t
+    if verbose:
+        print(f"  flat streaming scan  N={n_docs} block={block_docs}  "
+              f"{ms_per_query:.3f} ms/query  "
+              f"{docs_per_sec/1e6:.2f}M docs/s")
+    return {"flat_scan_ms_per_query": ms_per_query,
+            "flat_scan_docs_per_sec": docs_per_sec,
+            "flat_scan_n_docs": n_docs,
+            "flat_scan_block_docs": block_docs}
 
 
 def run(verbose: bool = True) -> List[dict]:

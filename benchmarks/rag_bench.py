@@ -3,7 +3,7 @@ end-to-end latency, per retriever configuration.
 
 The generator is a small LM *trained here* (a few hundred steps) to answer
 fact queries from retrieved context (data/synthetic.py::make_fact_corpus);
-hallucination is exactly measurable on this corpus (DESIGN.md §1).
+hallucination is exactly measurable on this corpus (docs/design.md §1).
 Claim validated: better retrieval -> lower hallucination; quantized+pruned
 retrieval preserves ROUGE-L while cutting latency; a weak (single-vector)
 retriever raises hallucination sharply (the paper's DistilCol row).

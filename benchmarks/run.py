@@ -77,6 +77,8 @@ def smoke(json_path=None) -> int:
           f"(margin {ann['hnsw_minus_ivf_recall10']:+.3f} at "
           f"{ann['scanned_frac']:.0%} scanned)  "
           f"hnsw {ann['hnsw_ms_per_query']:.3f} ms/q")
+    print("== smoke: streaming flat scan (wired search path) ==")
+    scan = kernel_bench.flat_scan_metrics()
     print("== smoke: storage footprint ==")
     storage.run(verbose=False)
     print("== smoke: serving latency (padding ladder, open-loop) ==")
@@ -115,6 +117,7 @@ def smoke(json_path=None) -> int:
         "quality": {"ndcg_full": full["ndcg@10"], "ndcg_hpc": hpc["ndcg@10"],
                     **cb},
         "ann": ann,
+        "scan": scan,
     }
     if json_path:
         with open(json_path, "w") as f:

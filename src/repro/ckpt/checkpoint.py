@@ -12,7 +12,7 @@ the commit point on POSIX. Async: `save_async` snapshots the pytree to host
 memory synchronously (cheap) and writes on a background thread so the train
 loop overlaps I/O with compute; `wait()` joins before the next save.
 
-Elasticity (DESIGN.md §4): leaves are stored *unsharded* (host-gathered);
+Elasticity (docs/design.md §4): leaves are stored *unsharded* (host-gathered);
 `restore` takes a template pytree (for structure/dtype) plus optional
 NamedShardings and device_puts each leaf — so a checkpoint written on a
 256-chip mesh restores onto 512 chips (or 1 CPU) unchanged. Multi-host

@@ -50,7 +50,7 @@ def lm_shapes(long_skip: Optional[str]) -> Tuple[ShapeCell, ...]:
 GNN_SHAPES = (
     # edge counts padded to a multiple of 4096 with phantom-node edges and
     # node counts padded to a multiple of 512 so both dims shard on every
-    # mesh (DESIGN.md §6); padding nodes are isolated and labelled -1.
+    # mesh (docs/design.md §6); padding nodes are isolated and labelled -1.
     ShapeCell("full_graph_sm", "train",
               {"n_nodes": 3072, "n_edges": 12288, "d_feat": 1433,
                "n_classes": 7, "real_edges": 10556}),

@@ -19,5 +19,5 @@ PNA = ArchSpec(
           "attenuation. d_feat/n_classes are overridden per shape cell "
           "(Cora/Reddit/ogbn-products/molecules). Paper technique: K-Means "
           "feature quantization applies; attention pruning N/A "
-          "(attention-free arch — DESIGN.md §5).",
+          "(attention-free arch — docs/design.md §5).",
 )

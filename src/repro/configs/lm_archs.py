@@ -1,6 +1,6 @@
 """Assigned LM-family architecture configs (exact public configs).
 
-long_500k policy (DESIGN.md §6): glm4/qwen2/llama3.2/kimi-k2 are pure
+long_500k policy (docs/design.md §6): glm4/qwen2/llama3.2/kimi-k2 are pure
 full-attention per their public configs -> the 500k decode cell is skipped
 for them; llama4-scout's public iRoPE design uses chunked-local attention
 (chunk 8192, every 4th layer global) -> it runs long_500k.
@@ -12,7 +12,7 @@ from repro.models.transformer import LMConfig
 
 _FULL_ATTN_SKIP = ("pure full-attention arch: O(S^2) prefill/O(S) dense "
                    "decode state at 524k is out of scope per assignment; "
-                   "see DESIGN.md §6")
+                   "see docs/design.md §6")
 
 GLM4_9B = ArchSpec(
     arch_id="glm4-9b",
@@ -47,7 +47,7 @@ QWEN2_1_5B = ArchSpec(
     source="[arXiv:2407.10671; hf]",
     notes="dense, GQA kv=2, QKV bias; ColQwen2.5 backbone family "
           "(12 heads don't divide the 16-way model axis: heads replicate, "
-          "fused qkv_out=1536 still shards — DESIGN.md §4)",
+          "fused qkv_out=1536 still shards — docs/design.md §4)",
 )
 
 LLAMA32_3B = ArchSpec(
@@ -105,6 +105,6 @@ KIMI_K2 = ArchSpec(
     shapes=lm_shapes(long_skip=_FULL_ATTN_SKIP),
     source="[arXiv:2501.kimi2; unverified]",
     notes="1T-param MoE 384e top-8 (paper-table config). Trains with bf16 "
-          "params + int8 Adam moments, ZeRO-sharded (DESIGN.md §6): fp32 "
+          "params + int8 Adam moments, ZeRO-sharded (docs/design.md §6): fp32 "
           "AdamW (16 B/param = 16.5 TB) cannot fit either mesh.",
 )

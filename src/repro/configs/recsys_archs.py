@@ -76,7 +76,7 @@ DIN = ArchSpec(
     source="[arXiv:1706.06978; paper]",
     notes="target attention over user history (Amazon Electronics vocab). "
           "Paper technique transfers fully: attention-guided history "
-          "pruning (din_prune_p) + table quantization — DESIGN.md §5.",
+          "pruning (din_prune_p) + table quantization — docs/design.md §5.",
 )
 
 DIEN = ArchSpec(

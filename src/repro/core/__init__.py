@@ -12,4 +12,5 @@ from repro.core import (  # noqa: F401
     late_interaction,
     pruning,
     quantization,
+    scan,
 )

@@ -6,7 +6,7 @@ so Hamming distance between two codes is simply
     popcount(code_a XOR code_b)        (restricted to the low b bits)
 
 — no learned hashing involved, exactly as in the paper. TPU adaptation
-(DESIGN.md §2): x86 POPCNT becomes ``jax.lax.population_count`` on the VPU;
+(docs/design.md §2): x86 POPCNT becomes ``jax.lax.population_count`` on the VPU;
 the scan kernel lives in kernels/hamming.py. For storage accounting we
 bit-pack code streams to ceil(N*b/8) bytes (the paper's 57x number for
 K=512/b=9); compute unpacks to int32 lanes, which is free relative to the

@@ -22,8 +22,8 @@ the repo's static-shape discipline:
     config), so builds are deterministic.
 
 The graph only *routes*: the `ef_search` surviving candidates are scored
-through the same fused `quantized_maxsim` scan the other backends use
-(see `search_hnsw`).
+through the same streaming fused-ADC engine the other backends use
+(core/scan.py, see `search_hnsw`).
 """
 from __future__ import annotations
 
@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import late_interaction as li
+from repro.core import scan as scan_mod
 from repro.core.index import doc_mean_vectors, mean_pool
 
 Array = jax.Array
@@ -291,17 +291,19 @@ def hnsw_candidates(index: HNSWIndex, q_vec: Array, *, ef_search: int
                         ef_search)
 
 
-@partial(jax.jit, static_argnames=("ef_search", "k"))
+@partial(jax.jit, static_argnames=("ef_search", "k", "scan"))
 def search_hnsw(index: HNSWIndex, q: Array, q_mask: Array, *, ef_search: int,
-                k: int) -> Tuple[Array, Array]:
-    """Graph-route to ef_search candidates, fused-scan them, top-k.
+                k: int, scan=None) -> Tuple[Array, Array]:
+    """Graph-route to ef_search candidates, stream-scan them, top-k.
 
-    Returns (scores (B, k), doc_ids (B, k)). Sentinel contract: rows
-    beyond the reachable candidates carry doc_id -1 with NEG_INF scores
-    (see IndexBackend.search); k > ef_search pads rather than failing,
-    matching search_ivf when k exceeds the probed pool.
+    The beam survivors score through the streaming engine's per-query
+    layout (core/scan.py) — the same fused ADC path as every other
+    backend. Returns (scores (B, k), doc_ids (B, k)). Sentinel contract:
+    rows beyond the reachable candidates carry doc_id -1 with
+    NEG_INF-or-below scores (see IndexBackend.search); k > ef_search
+    pads rather than failing, matching search_ivf when k exceeds the
+    probed pool.
     """
-    b = q.shape[0]
     q_vec = mean_pool(q, q_mask)                              # (B, D)
     _, cand = jax.vmap(
         lambda v: hnsw_candidates(index, v, ef_search=ef_search))(q_vec)
@@ -309,19 +311,7 @@ def search_hnsw(index: HNSWIndex, q: Array, q_mask: Array, *, ef_search: int,
     safe = jnp.where(valid, cand, 0)
     cand_codes = index.codes[safe]                            # (B, ef, Md)
     cand_mask = index.mask[safe] & valid[..., None]
-
-    def score_one(qi, qmi, codes, msk):
-        return li.quantized_maxsim(qi[None], qmi[None], codes, msk,
-                                   index.codebook)[0]
-
-    scores = jax.vmap(score_one)(q, q_mask, cand_codes, cand_mask)
-    scores = jnp.where(valid, scores, li.NEG_INF)
     ids = jnp.where(valid, index.doc_ids[safe], -1)
-    if k > ef_search:
-        pad = k - ef_search
-        scores = jnp.concatenate(
-            [scores, jnp.full((b, pad), li.NEG_INF, scores.dtype)], axis=1)
-        ids = jnp.concatenate(
-            [ids, jnp.full((b, pad), -1, ids.dtype)], axis=1)
-    top_s, top_i = jax.lax.top_k(scores, k)
-    return top_s, jnp.take_along_axis(ids, top_i, axis=1)
+    return scan_mod.quantized_maxsim_topk(
+        q, q_mask, cand_codes, cand_mask, index.codebook, k=k,
+        doc_ids=ids, valid=valid, scan=scan)

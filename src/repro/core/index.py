@@ -1,7 +1,7 @@
 """Retrieval indexes over (possibly quantized / binary) patch corpora.
 
 TPU adaptation of the paper's FAISS HNSW / Flat-L2 / bit-packed structures
-(DESIGN.md §2):
+(docs/design.md §2):
 
   * FlatIndex    — exhaustive fused scan (codes or floats). The TPU analogue
                    of Flat-L2: one MXU-friendly pass over the corpus shard.
@@ -26,8 +26,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import late_interaction as li
 from repro.core import quantization as quant
+from repro.core import scan as scan_mod
 
 Array = jax.Array
 
@@ -70,14 +70,20 @@ def build_flat(codes: Array, mask: Array, codebook: Array,
     return FlatIndex(codes, mask, codebook, doc_ids)
 
 
-@partial(jax.jit, static_argnames=("k",))
-def search_flat(index: FlatIndex, q: Array, q_mask: Array, *, k: int
+@partial(jax.jit, static_argnames=("k", "scan"))
+def search_flat(index: FlatIndex, q: Array, q_mask: Array, *, k: int,
+                scan: Optional[scan_mod.ScanConfig] = None
                 ) -> Tuple[Array, Array]:
-    """Exhaustive ADC MaxSim scan -> (scores (B,k), doc_ids (B,k))."""
-    scores = li.quantized_maxsim(q, q_mask, index.codes, index.mask,
-                                 index.codebook)              # (B, N)
-    top_s, top_i = jax.lax.top_k(scores, k)
-    return top_s, index.doc_ids[top_i]
+    """Exhaustive ADC MaxSim scan -> (scores (B,k), doc_ids (B,k)).
+
+    Streams the corpus through core/scan.py in `scan.block_docs`-sized
+    blocks with top-k folded into the sweep — no (B, N) score matrix.
+    When k > N the tail rows carry the -1/sentinel contract (see
+    IndexBackend.search) instead of crashing lax.top_k.
+    """
+    return scan_mod.quantized_maxsim_topk(
+        q, q_mask, index.codes, index.mask, index.codebook, k=k,
+        doc_ids=index.doc_ids, scan=scan)
 
 
 class FloatFlatIndex(NamedTuple):
@@ -95,12 +101,14 @@ def build_float_flat(embeddings: Array, mask: Array,
     return FloatFlatIndex(embeddings, mask, doc_ids)
 
 
-@partial(jax.jit, static_argnames=("k",))
+@partial(jax.jit, static_argnames=("k", "scan"))
 def search_float_flat(index: FloatFlatIndex, q: Array, q_mask: Array, *,
-                      k: int) -> Tuple[Array, Array]:
-    scores = li.maxsim(q, q_mask, index.embeddings, index.mask)
-    top_s, top_i = jax.lax.top_k(scores, k)
-    return top_s, index.doc_ids[top_i]
+                      k: int, scan: Optional[scan_mod.ScanConfig] = None
+                      ) -> Tuple[Array, Array]:
+    """Exhaustive float MaxSim scan, streamed (see search_flat)."""
+    return scan_mod.maxsim_topk(
+        q, q_mask, index.embeddings, index.mask, k=k,
+        doc_ids=index.doc_ids, scan=scan)
 
 
 # ---------------------------------------------------------------------------
@@ -186,15 +194,19 @@ def ivf_drop_rate(index: IVFIndex, n_docs: int) -> float:
     return 1.0 - stored / max(n_docs, 1)
 
 
-@partial(jax.jit, static_argnames=("n_probe", "k"))
+@partial(jax.jit, static_argnames=("n_probe", "k", "scan"))
 def search_ivf(index: IVFIndex, q: Array, q_mask: Array, *, n_probe: int,
-               k: int) -> Tuple[Array, Array]:
-    """Route to n_probe buckets, fused-scan them, global top-k.
+               k: int, scan: Optional[scan_mod.ScanConfig] = None
+               ) -> Tuple[Array, Array]:
+    """Route to n_probe buckets, stream-scan them, global top-k.
 
-    Returns (scores (B, k), doc_ids (B, k)). Sentinel contract: when the
-    probed buckets hold fewer than k valid documents, the tail rows carry
-    doc_id -1 with NEG_INF scores — callers must ignore `id < 0` rows
-    (see IndexBackend.search).
+    Returns (scores (B, k), doc_ids (B, k)). The probed pool (B,
+    n_probe*cap candidates per query) scores through the streaming
+    engine's per-query layout, so the (B, Mq, pool, Md) similarity
+    intermediate never materialises. Sentinel contract: when the probed
+    buckets hold fewer than k valid documents, the tail rows carry
+    doc_id -1 with NEG_INF-or-below scores — callers must ignore
+    `id < 0` rows (see IndexBackend.search).
     """
     b = q.shape[0]
     q_vec = mean_pool(q, q_mask)                              # (B, D)
@@ -217,22 +229,9 @@ def search_ivf(index: IVFIndex, q: Array, q_mask: Array, *, n_probe: int,
     cand_mask = cand_mask.reshape(b, n_probe * cap, md)
     cand_valid = cand_valid.reshape(b, n_probe * cap)
     cand_ids = cand_ids.reshape(b, n_probe * cap)
-
-    def score_one(qi, qmi, codes, msk):
-        return li.quantized_maxsim(qi[None], qmi[None], codes, msk,
-                                   index.codebook)[0]
-    scores = jax.vmap(score_one)(q, q_mask, cand_codes, cand_mask)
-    scores = jnp.where(cand_valid, scores, li.NEG_INF)
-    if scores.shape[1] < k:
-        # candidate pool smaller than k: honour the sentinel contract
-        # (pad with -1/NEG_INF rows) instead of failing top_k
-        pad = k - scores.shape[1]
-        scores = jnp.concatenate(
-            [scores, jnp.full((b, pad), li.NEG_INF, scores.dtype)], axis=1)
-        cand_ids = jnp.concatenate(
-            [cand_ids, jnp.full((b, pad), -1, cand_ids.dtype)], axis=1)
-    top_s, top_i = jax.lax.top_k(scores, k)
-    return top_s, jnp.take_along_axis(cand_ids, top_i, axis=1)
+    return scan_mod.quantized_maxsim_topk(
+        q, q_mask, cand_codes, cand_mask, index.codebook, k=k,
+        doc_ids=cand_ids, valid=cand_valid, scan=scan)
 
 
 # ---------------------------------------------------------------------------
@@ -255,9 +254,12 @@ def build_hamming(codes: Array, mask: Array, bits: int,
                         jnp.int32(bits))
 
 
-@partial(jax.jit, static_argnames=("k", "bits"))
+@partial(jax.jit, static_argnames=("k", "bits", "scan"))
 def search_hamming(index: HammingIndex, q_codes: Array, q_mask: Array, *,
-                   bits: int, k: int) -> Tuple[Array, Array]:
-    scores = li.binary_maxsim(q_codes, q_mask, index.codes, index.mask, bits)
-    top_s, top_i = jax.lax.top_k(scores, k)
-    return top_s, index.doc_ids[top_i]
+                   bits: int, k: int,
+                   scan: Optional[scan_mod.ScanConfig] = None
+                   ) -> Tuple[Array, Array]:
+    """Popcount MaxSim scan, streamed (see search_flat)."""
+    return scan_mod.hamming_maxsim_topk(
+        q_codes, q_mask, index.codes, index.mask, bits=bits, k=k,
+        doc_ids=index.doc_ids, scan=scan)

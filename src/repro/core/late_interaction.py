@@ -13,7 +13,7 @@ after which scoring a document patch is a pure table gather — zero matmul
 FLOPs per document. This is the TPU-native realisation of the paper's
 "decode each code back to its centroid then search" (§III-E1): instead of
 materialising a decoded float corpus in HBM (undoing the 32x storage win),
-the decode is folded into a VMEM table lookup. See DESIGN.md §2.
+the decode is folded into a VMEM table lookup. See docs/design.md §2.
 """
 from __future__ import annotations
 

@@ -8,7 +8,7 @@ cleanly and shard over the mesh.
 
 The paper prunes document patches by attention score (§III-C) and the query
 patches at query time (§III-E step 2); we support both sides plus `both`
-(DESIGN.md §2, assumption notes).
+(docs/design.md §2, assumption notes).
 """
 from __future__ import annotations
 

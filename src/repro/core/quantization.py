@@ -4,7 +4,7 @@ Replaces D-dim float32 patch embeddings with 1-byte centroid indices
 (K <= 256) or 2-byte indices (K <= 65536), giving up to 32x storage
 compression for D=128/float32.
 
-TPU adaptation (DESIGN.md §2): FAISS's CPU Lloyd iteration is replaced by a
+TPU adaptation (docs/design.md §2): FAISS's CPU Lloyd iteration is replaced by a
 fully batched, jit-compiled Lloyd step where
 
   * assignment is one MXU matmul:  argmin_k ||x||^2 - 2 x C^T + ||c_k||^2

@@ -2,7 +2,7 @@
 
 A background thread pulls batches from a (host, numpy/jnp) iterator into a
 bounded queue and places them onto the mesh with the batch-axis sharding.
-Straggler mitigation at the data layer (DESIGN.md §4): if the producer
+Straggler mitigation at the data layer (docs/design.md §4): if the producer
 misses the `timeout_s` budget (slow storage shard / preprocessing straggler)
 the consumer *re-serves the previous batch* and logs the event instead of
 stalling the whole step — at 1000+ nodes a single slow input shard must not

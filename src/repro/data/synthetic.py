@@ -1,6 +1,6 @@
 """Synthetic data generators with *planted structure*.
 
-No datasets ship in this container (DESIGN.md §1), so every benchmark runs
+No datasets ship in this container (docs/design.md §1), so every benchmark runs
 on controlled synthetic data where the quantities the paper measures are
 well-defined:
 

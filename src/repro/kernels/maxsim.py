@@ -2,7 +2,7 @@
 
 score(b, n) = sum_i q_mask[b,i] * max_j (d_mask[n,j] ? <q[b,i], d[n,j]> : -inf)
 
-Tiling (DESIGN.md §7): the query block for batch row b — (Mq, D) — stays
+Tiling (docs/design.md §7): the query block for batch row b — (Mq, D) — stays
 resident in VMEM across the whole corpus sweep; documents stream through in
 blocks of `block_docs` docs ((block_docs*Md, D) flattened so the Q @ D^T is a
 single MXU matmul per tile). Per-tile VMEM:

@@ -26,14 +26,18 @@ Array = jax.Array
 Impl = Literal["auto", "pallas", "interpret", "ref"]
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def _resolve(impl: Impl) -> str:
-    if impl != "auto":
-        return impl
-    return "pallas" if _on_tpu() else "ref"
+    """Platform dispatch, shared with the streaming scan engine.
+
+    core/scan.py owns the single auto->pallas-on-TPU policy; this module
+    spells the compiled-XLA oracle "ref" where the engine says "jnp"
+    (the resolver accepts both). Lazy import: repro.core.scan imports
+    kernel modules from this package, so binding it at module top would
+    race package init.
+    """
+    from repro.core.scan import resolve_impl
+    mode = resolve_impl(impl)
+    return "ref" if mode == "jnp" else mode
 
 
 def _pad_docs(arrs, n, block):

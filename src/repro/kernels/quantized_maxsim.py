@@ -1,5 +1,5 @@
 """Pallas TPU kernel: fused decode-and-score ADC MaxSim — the paper's hot
-path, TPU-adapted (DESIGN.md §2).
+path, TPU-adapted (docs/design.md §2).
 
 A float corpus scan reads 4*D = 512 B/patch from HBM; this kernel reads the
 1-byte code instead and resolves it against the query-centroid table

@@ -58,7 +58,7 @@ def _eval_sds(fn, *args):
 
 def _opt_cfg_for(arch_id: str) -> opt.AdamWConfig:
     if arch_id.startswith("kimi"):
-        # 1T params: bf16 params + int8 moments (DESIGN.md §6)
+        # 1T params: bf16 params + int8 moments (docs/design.md §6)
         return opt.AdamWConfig(moment_dtype="int8")
     return opt.AdamWConfig()
 

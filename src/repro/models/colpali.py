@@ -1,6 +1,6 @@
 """ColPali-style retrieval encoder: the paper's backbone (ColQwen2.5 class).
 
-Architecture (DESIGN.md §2, §5):
+Architecture (docs/design.md §2, §5):
   * the *modality frontend is a stub* per the assignment — documents arrive
     as precomputed patch embeddings (B, M_patches, d_patch), exactly what a
     frozen vision tower would emit; `input_specs` hands over

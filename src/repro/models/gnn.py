@@ -1,7 +1,7 @@
 """PNA — Principal Neighbourhood Aggregation GNN (arXiv:2004.05718).
 
 Message passing is built on jax.ops.segment_sum / segment_max / segment_min
-over an edge-index (DESIGN.md: JAX has no CSR SpMM — the scatter/segment
+over an edge-index (docs/design.md: JAX has no CSR SpMM — the scatter/segment
 formulation IS the system here). A PNA layer:
 
     m_e   = MLP_pre([h_src, h_dst])                  per edge
@@ -16,7 +16,7 @@ Sharding: edges shard flat over all mesh axes ("edge" rule) and node
 tensors over ("nodes") — cells pad both counts so they divide every mesh;
 GSPMD reduces per-shard segment partials with one collective per
 aggregator. Paper-technique applicability: K-Means feature quantization
-optionally compresses the input node features (DESIGN.md §5); attention
+optionally compresses the input node features (docs/design.md §5); attention
 pruning does not apply (PNA is attention-free).
 """
 from __future__ import annotations

@@ -227,7 +227,7 @@ def attention_decode(p: Dict[str, Array], x: Array, pos: Array,
 
     Returns (out (B, 1, D), new_k_cache, new_v_cache). For chunked-local
     layers only a static `chunk`-sized window of the cache is touched
-    (sub-quadratic decode, DESIGN.md §6).
+    (sub-quadratic decode, docs/design.md §6).
     """
     b, _, _ = x.shape
     s_max = k_cache.shape[1]

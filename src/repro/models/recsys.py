@@ -1,6 +1,6 @@
 """RecSys models: DLRM (MLPerf), DCN-v2, DIN, DIEN.
 
-Substrate notes (DESIGN.md):
+Substrate notes (docs/design.md):
   * JAX has no nn.EmbeddingBag — `embedding_bag` here is jnp.take +
     jax.ops.segment_sum (sum/mean modes), the standard JAX formulation;
   * embedding tables are a list of (rows_i, dim) arrays, row-sharded over

@@ -4,7 +4,7 @@ Covers the five assigned LM architectures (glm4-9b, qwen2-1.5b,
 llama3.2-3b, llama4-scout-17b-a16e, kimi-k2-1t-a32b) and serves as the
 ColPali encoder backbone (models/colpali.py).
 
-Implementation notes (DESIGN.md §4, §6):
+Implementation notes (docs/design.md §4, §6):
   * layers are stacked on a leading dim and iterated with lax.scan +
     jax.checkpoint — one traced block, O(1) compile in depth, remat saves
     only the (sequence-parallel-sharded) residual carry;
@@ -262,7 +262,7 @@ def logits_fn(params: Dict[str, Any], h: Array, cfg: LMConfig) -> Array:
 
 def loss_fn(params: Dict[str, Any], tokens: Array, targets: Array,
             cfg: LMConfig, shd=NULL) -> Tuple[Array, Dict[str, Array]]:
-    """Next-token CE, chunked over the sequence (DESIGN.md §6).
+    """Next-token CE, chunked over the sequence (docs/design.md §6).
 
     Positions with target < 0 are masked out (prompt positions in RAG
     fine-tuning, padding).

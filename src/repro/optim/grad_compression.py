@@ -1,6 +1,6 @@
 """Gradient compression for bandwidth-bound data parallelism.
 
-Two composable schemes (DESIGN.md §4 distributed-optimization tricks):
+Two composable schemes (docs/design.md §4 distributed-optimization tricks):
 
   * int8 stochastic-rounding quantization — 4x less all-reduce traffic;
     stochastic rounding keeps the estimator unbiased so convergence is

@@ -6,7 +6,7 @@ decay, and (for the 1T-param kimi-k2 cell) *int8 blockwise-quantized Adam
 moments* — 1 byte per moment entry with a per-row fp32 scale, dequantized/
 requantized inside the (jit-fused) update. This is the memory trick that
 brings kimi-k2 training from 16 B/param (fp32 Adam) to ~4.1 B/param
-(bf16 params + int8 m + int8 v) — DESIGN.md §6. It is also thematically the
+(bf16 params + int8 m + int8 v) — docs/design.md §6. It is also thematically the
 paper's quantization idea applied to optimizer state (beyond-paper).
 """
 from __future__ import annotations

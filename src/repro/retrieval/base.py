@@ -236,16 +236,24 @@ class IndexBackend:
         stages (codebook fit + corpus quantization) sharded over it."""
         raise NotImplementedError
 
-    def search(self, state: RetrieverState, query: Query, *, k: int
-               ) -> Tuple[Array, Array]:
+    def search(self, state: RetrieverState, query: Query, *, k: int,
+               scan=None) -> Tuple[Array, Array]:
         """Candidate search -> (scores (B, k), doc_ids (B, k)).
+
+        `scan` (a `repro.core.scan.ScanConfig`, or None for defaults)
+        selects the streaming-scan block size and block-scorer impl; all
+        built-in backends route their scoring through the blocked
+        score+top-k engine in core/scan.py, so no search path ever
+        materialises an O(N * Mq) intermediate.
 
         Sentinel contract: a backend whose structure can surface fewer
         than k valid documents (ivf with sparse probed buckets, hnsw with
-        a beam smaller than k reachable nodes) MUST fill the tail rows
-        with doc_id -1 and NEG_INF scores. Consumers — the facade rerank,
-        benchmarks, hit/recall accounting — must ignore `id < 0` rows
-        rather than treating them as real documents.
+        a beam smaller than k reachable nodes, any backend asked for
+        k > N) MUST fill the tail rows with doc_id -1 and NEG_INF-or-
+        below scores (for hamming's int32 scores: the int32 minimum).
+        Consumers — the facade rerank, benchmarks, hit/recall
+        accounting — must ignore `id < 0` rows rather than treating them
+        as real documents.
         """
         raise NotImplementedError
 

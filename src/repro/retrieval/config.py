@@ -15,6 +15,7 @@ from typing import Literal, Optional
 from repro.core import binary as binary_mod
 from repro.core.graph import HNSWConfig
 from repro.core.index import IVFConfig
+from repro.core.scan import ScanConfig
 
 # (mode, index) -> backend name; the old union dispatch, now a table.
 _MODE_INDEX_TO_BACKEND = {
@@ -62,6 +63,10 @@ class HPCConfig:
                                      # sample size for corpus-scale N
     rerank: int = 0                  # rerank top-r candidates with unpruned
                                      # quantized maxsim (0 = off)
+    scan_block_docs: int = 256       # docs per streaming-scan block (peak
+                                     # scan memory ~ B*Mq*block*Md floats)
+    scan_impl: str = "auto"          # block scorer: auto|pallas|jnp|interpret
+                                     # (core/scan.py dispatcher)
     backend: Optional[str] = None    # registry key; wins over mode/index
 
     def __post_init__(self):
@@ -89,3 +94,9 @@ class HPCConfig:
     @property
     def bits(self) -> int:
         return binary_mod.bits_for_k(self.k)
+
+    @property
+    def scan(self) -> ScanConfig:
+        """Static streaming-scan config implied by this HPCConfig."""
+        return ScanConfig(block_docs=self.scan_block_docs,
+                          impl=self.scan_impl)

@@ -31,10 +31,11 @@ class FlatBackend(IndexBackend):
             rerank_codes=codes_full,
             rerank_mask=corpus.mask)
 
-    def search(self, state: RetrieverState, query: Query, *, k: int
-               ) -> Tuple[Array, Array]:
+    def search(self, state: RetrieverState, query: Query, *, k: int,
+               scan=None) -> Tuple[Array, Array]:
         return index_mod.search_flat(
-            state.backend_state, query.embeddings, query.mask, k=k)
+            state.backend_state, query.embeddings, query.mask, k=k,
+            scan=scan)
 
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         codes = state.backend_state.codes

@@ -38,10 +38,11 @@ class FloatFlatBackend(IndexBackend):
             rerank_codes=jnp.zeros((n, 1), jnp.uint8),
             rerank_mask=jnp.zeros((n, 1), bool))
 
-    def search(self, state: RetrieverState, query: Query, *, k: int
-               ) -> Tuple[Array, Array]:
+    def search(self, state: RetrieverState, query: Query, *, k: int,
+               scan=None) -> Tuple[Array, Array]:
         return index_mod.search_float_flat(
-            state.backend_state, query.embeddings, query.mask, k=k)
+            state.backend_state, query.embeddings, query.mask, k=k,
+            scan=scan)
 
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         e = state.backend_state.embeddings

@@ -52,13 +52,13 @@ class HammingBackend(IndexBackend):
             rerank_codes=codes_full,
             rerank_mask=corpus.mask)
 
-    def search(self, state: RetrieverState, query: Query, *, k: int
-               ) -> Tuple[Array, Array]:
+    def search(self, state: RetrieverState, query: Query, *, k: int,
+               scan=None) -> Tuple[Array, Array]:
         s = state.backend_state
         q_codes = quant.quantize(query.embeddings, state.codebook,
                                  code_dtype=code_dtype(1 << s.bits))
         return index_mod.search_hamming(s.index, q_codes, query.mask,
-                                        bits=s.bits, k=k)
+                                        bits=s.bits, k=k, scan=scan)
 
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         s = state.backend_state

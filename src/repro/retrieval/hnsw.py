@@ -54,11 +54,11 @@ class HNSWBackend(IndexBackend):
             rerank_codes=codes_full,
             rerank_mask=corpus.mask)
 
-    def search(self, state: RetrieverState, query: Query, *, k: int
-               ) -> Tuple[Array, Array]:
+    def search(self, state: RetrieverState, query: Query, *, k: int,
+               scan=None) -> Tuple[Array, Array]:
         s = state.backend_state
         return graph_mod.search_hnsw(s.index, query.embeddings, query.mask,
-                                     ef_search=s.ef_search, k=k)
+                                     ef_search=s.ef_search, k=k, scan=scan)
 
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         ix = state.backend_state.index

@@ -68,11 +68,11 @@ class IVFBackend(IndexBackend):
             rerank_codes=codes_full,
             rerank_mask=corpus.mask)
 
-    def search(self, state: RetrieverState, query: Query, *, k: int
-               ) -> Tuple[Array, Array]:
+    def search(self, state: RetrieverState, query: Query, *, k: int,
+               scan=None) -> Tuple[Array, Array]:
         s = state.backend_state
         return index_mod.search_ivf(s.index, query.embeddings, query.mask,
-                                    n_probe=s.n_probe, k=k)
+                                    n_probe=s.n_probe, k=k, scan=scan)
 
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         codes = state.backend_state.index.bucket_codes

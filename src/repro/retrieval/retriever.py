@@ -10,14 +10,15 @@ through `RetrieverState` pytrees, so build/search jit, shard (see
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.core import late_interaction as li
 from repro.core import pruning
+from repro.core import scan as scan_mod
 from repro.dist.sharding import Sharder, is_logical_spec
 from repro.retrieval.base import (Corpus, IndexBackend, Query,
                                   RetrieverState, get_backend)
@@ -75,8 +76,19 @@ class Retriever:
         pruned = Query(q_emb, q_mask, query.salience)
 
         # Steps 3-4 — backend candidate search (over-fetch for rerank).
+        # All built-in backends score through the streaming blocked
+        # scan (core/scan.py), configured by cfg.scan_block_docs/scan_impl.
+        # Out-of-tree backends written against the pre-scan signature
+        # search(state, query, *, k) are still called without `scan`.
         n_cand = k if cfg.rerank == 0 else max(k, cfg.rerank)
-        scores, ids = backend.search(state, pruned, k=n_cand)
+        params = inspect.signature(backend.search).parameters
+        takes_scan = "scan" in params or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+        if takes_scan:
+            scores, ids = backend.search(state, pruned, k=n_cand,
+                                         scan=cfg.scan)
+        else:
+            scores, ids = backend.search(state, pruned, k=n_cand)
 
         # Step 5 — rerank candidates with unpruned quantized MaxSim.
         if cfg.rerank and not backend.exact_scores:
@@ -85,18 +97,13 @@ class Retriever:
 
     def _rerank(self, state: RetrieverState, query: Query, scores: Array,
                 ids: Array, *, k: int) -> Tuple[Array, Array]:
-        cand_codes = state.rerank_codes[ids]                  # (B, r, Md)
-        cand_mask = state.rerank_mask[ids]
-
-        def rerank_one(qi, qmi, codes, msk):
-            return li.quantized_maxsim(qi[None], qmi[None], codes, msk,
-                                       state.codebook)[0]
-
-        re_scores = jax.vmap(rerank_one)(query.embeddings, query.mask,
-                                         cand_codes, cand_mask)
-        re_scores = jnp.where(ids >= 0, re_scores, li.NEG_INF)
-        top_s, top_i = jax.lax.top_k(re_scores, k)
-        return top_s, jnp.take_along_axis(ids, top_i, axis=1)
+        safe = jnp.maximum(ids, 0)
+        cand_codes = state.rerank_codes[safe]                 # (B, r, Md)
+        cand_mask = state.rerank_mask[safe]
+        return scan_mod.quantized_maxsim_topk(
+            query.embeddings, query.mask, cand_codes, cand_mask,
+            state.codebook, k=k, doc_ids=ids, valid=ids >= 0,
+            scan=self.cfg.scan)
 
     # -- accounting ---------------------------------------------------------
 

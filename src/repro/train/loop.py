@@ -1,6 +1,6 @@
 """Fault-tolerant training loop + GPipe pipeline parallelism.
 
-Fault tolerance (DESIGN.md §4):
+Fault tolerance (docs/design.md §4):
   * checkpoint/restart — CheckpointManager (atomic+async), auto-resume from
     the latest committed step;
   * NaN/inf guard — the *jitted* step rejects non-finite updates

@@ -68,7 +68,7 @@ def test_exact_assigned_configs():
 
 
 def test_recsys_tables_shard_cleanly():
-    """Padded rows divide the 16-way model axis (DESIGN.md §6)."""
+    """Padded rows divide the 16-way model axis (docs/design.md §6)."""
     for a in ("dlrm-mlperf", "dcn-v2", "din", "dien"):
         for r in registry.get(a).config.table_rows:
             assert r % 512 == 0

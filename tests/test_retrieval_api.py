@@ -183,6 +183,40 @@ def test_registry_unknown_backend_raises():
         get_backend("scann")
 
 
+def test_out_of_tree_backend_with_legacy_search_signature(data):
+    """An out-of-tree backend written against the pre-scan contract
+    search(state, query, *, k) must keep working: the facade only passes
+    `scan=` to backends whose signature accepts it."""
+    from repro.retrieval import base as base_mod
+
+    @base_mod.register_backend("legacy_sig")
+    class LegacyBackend(base_mod.IndexBackend):
+        exact_scores = True
+
+        def build(self, key, corpus, cfg, mesh=None):
+            n = corpus.embeddings.shape[0]
+            return base_mod.RetrieverState(
+                jnp.zeros((1, 1)), jnp.arange(n, dtype=jnp.int32),
+                jnp.zeros((n, 1), jnp.uint8), jnp.zeros((n, 1), bool))
+
+        def search(self, state, query, *, k):          # no `scan` kwarg
+            b = query.embeddings.shape[0]
+            ids = jnp.tile(state.backend_state[None, :k], (b, 1))
+            return jnp.zeros((b, k)), ids
+
+        def storage_bytes(self, state):
+            return {}
+
+    try:
+        r = Retriever(HPCConfig(backend="legacy_sig"))
+        state = r.build(jax.random.PRNGKey(0), _corpus(data))
+        scores, ids = r.search(state, _queries(data), k=3)
+        assert ids.shape == (data.query_patches.shape[0], 3)
+        np.testing.assert_array_equal(np.asarray(ids[0]), [0, 1, 2])
+    finally:
+        base_mod._REGISTRY.pop("legacy_sig", None)
+
+
 def test_code_dtype_boundary():
     assert code_dtype(128) == jnp.uint8
     assert code_dtype(256) == jnp.uint8
