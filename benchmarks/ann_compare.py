@@ -91,13 +91,16 @@ def run(seed: int = 0, verbose: bool = True,
 
     r_ivf = Retriever(cfg_for(
         "ivf", ivf=IVFConfig(n_list=n_list, n_probe=n_probe, iters=8)))
-    st_ivf = r_ivf.build(build_key, corpus)
+    # same build_key as flat on purpose: identical codebook k-means init
+    # keeps the backend comparison apples-to-apples
+    st_ivf = r_ivf.build(build_key, corpus)  # noqa: JAX01
     cap = st_ivf.backend_state.index.bucket_codes.shape[1]
     budget = n_probe * cap
 
     r_hnsw = Retriever(cfg_for(
         "hnsw", hnsw=HNSWConfig(m=8, ef_construction=48, ef_search=budget)))
-    st_hnsw = r_hnsw.build(build_key, corpus)
+    # same build_key again, same controlled-comparison rationale
+    st_hnsw = r_hnsw.build(build_key, corpus)  # noqa: JAX01
 
     rows = []
     for name, r, st, scanned in (

@@ -26,9 +26,9 @@ def _scale(measured_bytes: int, measured_codes: int) -> float:
 
 
 def run(verbose: bool = True) -> List[dict]:
-    key = jax.random.PRNGKey(0)
+    k_data, k_build, k_pq = jax.random.split(jax.random.PRNGKey(0), 3)
     spec = synthetic.CorpusSpec(n_docs=512, n_queries=8)
-    data = synthetic.make_retrieval_corpus(key, spec)
+    data = synthetic.make_retrieval_corpus(k_data, spec)
     n_codes = 512 * spec.n_patches
     float_ref = PAPER_DOCS * PAPER_PATCHES * D * 4
 
@@ -48,14 +48,15 @@ def run(verbose: bool = True) -> List[dict]:
     # single 1-byte K-Means code (the paper's text: '1-byte code index')
     retriever = Retriever(HPCConfig(k=256, backend="flat",
                                     prune_side="none", kmeans_iters=5))
-    state = retriever.build(key, Corpus(data.doc_patches, data.doc_mask,
-                                        data.doc_salience))
+    state = retriever.build(k_build,
+                            Corpus(data.doc_patches, data.doc_mask,
+                                   data.doc_salience))
     payload = retriever.storage_bytes(state)["payload"]
     add("K-Means K=256 (1 B/code)", _scale(payload, n_codes),
         "paper text's scheme; its '32x' table row is PQ-16 below")
 
     # PQ-16 x uint8 == the paper table's 0.08 GB / 32x row
-    cbs = quant.pq_fit(key, data.doc_patches.reshape(-1, D),
+    cbs = quant.pq_fit(k_pq, data.doc_patches.reshape(-1, D),
                        quant.PQConfig(k=256, n_sub=16, iters=4))
     pq_codes = quant.pq_quantize(data.doc_patches.reshape(-1, D), cbs)
     add("PQ-16xK256 (16 B/patch)", _scale(pq_codes.size, n_codes),

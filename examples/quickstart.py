@@ -17,12 +17,12 @@ from repro.retrieval import Corpus, HPCConfig, Query, Retriever
 
 
 def main():
-    key = jax.random.PRNGKey(0)
+    k_data, k_build = jax.random.split(jax.random.PRNGKey(0))
     print("building synthetic corpus (1024 docs x 32 patches x 128 dim)...")
     spec = synthetic.CorpusSpec(n_docs=1024, n_queries=64, n_topics=24,
                                 patches_per_topic=10, noise=0.2,
                                 salient_frac=0.4)
-    data = synthetic.make_retrieval_corpus(key, spec)
+    data = synthetic.make_retrieval_corpus(k_data, spec)
     corpus = Corpus(data.doc_patches, data.doc_mask, data.doc_salience)
     queries = Query(data.query_patches, data.query_mask, data.query_salience)
 
@@ -39,7 +39,7 @@ def main():
     for name, cfg in configs.items():
         retriever = Retriever(cfg)
         t0 = time.perf_counter()
-        state = retriever.build(key, corpus)
+        state = retriever.build(k_build, corpus)
         jax.block_until_ready(state.codebook)
         t_build = time.perf_counter() - t0
 

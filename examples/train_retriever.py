@@ -56,12 +56,12 @@ def main():
                                 n_patches=args.n_patches, query_len=8)
     print(f"encoder params: {enc.param_count()/1e6:.1f}M")
 
-    key = jax.random.PRNGKey(0)
+    k_data, k_init, key = jax.random.split(jax.random.PRNGKey(0), 3)
     # a fixed topic structure shared by train batches and the eval corpus
     spec = synthetic.CorpusSpec(n_docs=512, n_queries=64,
                                 n_patches=args.n_patches, n_q_patches=8,
                                 dim=enc.d_patch, n_topics=16)
-    eval_data = synthetic.make_retrieval_corpus(key, spec)
+    eval_data = synthetic.make_retrieval_corpus(k_data, spec)
 
     def batches():
         i = 0
@@ -74,7 +74,8 @@ def main():
             sel = jax.random.randint(qk, (args.batch, 8), 0,
                                      args.n_patches)
             qp = jnp.take_along_axis(docs, sel[..., None], axis=1)
-            qp = qp + 0.1 * jax.random.normal(qk, qp.shape)
+            nk = jax.random.fold_in(k, 2)
+            qp = qp + 0.1 * jax.random.normal(nk, qp.shape)
             # query tokens: hash of the topic (toy textual query)
             qt = (pick[:, None] * 7 + jnp.arange(enc.query_len)[None]) \
                 % bb.vocab
@@ -88,7 +89,7 @@ def main():
 
     ocfg = opt.AdamWConfig(lr=1e-3, total_steps=args.steps, warmup_steps=10,
                            weight_decay=0.01)
-    params = colpali.init(key, enc)
+    params = colpali.init(k_init, enc)
     state = opt.init(ocfg, params)
 
     def eval_quality(p):

@@ -1,0 +1,46 @@
+"""`repro.analysis`: static-analysis subsystem (docs/design.md §8).
+
+Three engines keep the repo's memory/compute envelope a *checked contract*
+instead of a convention:
+
+  * `jaxpr_budget` + `manifests` — trace every registered search entry
+    point at symbolic corpus size, walk the closed jaxpr (into pjit /
+    scan / while / cond sub-jaxprs), and enforce the declarative
+    per-entry-point budget manifest: max intermediate bytes, "no aval
+    scales with N beyond the declared per-document allowance", and
+    output dtype contracts.
+  * `recompile` — a runtime sentry counting distinct lowered signatures
+    per jitted entry point, so the serving ladder provably compiles
+    exactly its declared rung set (weak-dtype / non-static-arg leaks
+    otherwise grow the jit cache without bound).
+  * `lintcore` + `astchecks` — the shared AST lint framework (the ruff
+    fallback rules E9/F401/F811/F541 with `# noqa[: CODE]` semantics)
+    plus the JAX-aware rules JAX01-JAX04.
+
+`tools/jaxlint.py` is the CLI driving all three; `tools/astlint.py` is a
+thin shim over `lintcore` so the CI fallback linter cannot drift from the
+framework.
+"""
+from repro.analysis.jaxpr_budget import (BudgetViolation, analyze_manifest,
+                                         intermediate_avals, iter_jaxprs)
+from repro.analysis.lintcore import Finding, Rule, check_source, run_paths
+from repro.analysis.manifests import BudgetManifest, get_manifest, manifests
+from repro.analysis.recompile import (RecompileGuardError, RecompileSentry,
+                                      ladder_signatures)
+
+__all__ = [
+    "BudgetManifest",
+    "BudgetViolation",
+    "Finding",
+    "RecompileGuardError",
+    "RecompileSentry",
+    "Rule",
+    "analyze_manifest",
+    "check_source",
+    "get_manifest",
+    "intermediate_avals",
+    "iter_jaxprs",
+    "ladder_signatures",
+    "manifests",
+    "run_paths",
+]

@@ -1,0 +1,283 @@
+"""JAX-aware AST lint rules (JAX01-JAX04) on the lintcore framework.
+
+Rule table (docs/design.md §8):
+
+  JAX01  PRNG key reuse: the same key variable consumed by two key-first
+         calls without an intervening ``split``/``fold_in`` — correlated
+         randomness (two samplers fed the same key produce dependent
+         draws; two *stages* fed the same key silently share entropy).
+  JAX02  host sync inside jitted code: ``.item()``, ``float(param)`` /
+         ``int(param)`` / ``bool(param)`` on a traced argument, or any
+         ``np.*`` call in a ``@jax.jit``-decorated body — each forces a
+         device->host transfer (or a trace error) on the hot path.
+  JAX03  jitted function takes a known-static parameter (``scan``,
+         ``k``, ``n_probe``, ``ef_search``, ``bits``, ...) that is not
+         declared in ``static_argnames`` — every distinct value then
+         either fails tracing (non-hashable configs) or bloats the
+         compile cache instead of specializing.
+  JAX04  bare ``lax.top_k`` outside the streaming scan engine: top_k
+         crashes when k exceeds the input length, so call sites must
+         either route through core/scan.py's sentinel-padded merge or
+         carry a ``# noqa: JAX04`` with the static k <= N argument.
+
+All rules are deliberately heuristic (AST-only, no imports executed):
+false positives are expected to be rare and suppressed with a
+code-specific ``# noqa: JAXxx`` plus a justification comment.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.lintcore import Finding, Rule
+
+# jax.random.* callees that derive/construct keys rather than consume them
+_KEY_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "key_data",
+                 "wrap_key_data", "clone"}
+# function parameters the repo treats as jit-static by contract
+KNOWN_STATIC_PARAMS = frozenset({
+    "scan", "k", "n_probe", "ef_search", "bits", "block_docs", "block_n",
+    "impl", "interpret", "p", "config", "n_list",
+})
+# the one module whose top_k merge owns the k <= N guarantee
+SCAN_ENGINE_SUFFIX = ("core/scan.py", "core\\scan.py")
+
+
+def _call_root(func: ast.AST) -> Optional[str]:
+    """Leftmost name of a call target: jax.random.normal -> jax."""
+    n = func
+    while isinstance(n, ast.Attribute):
+        n = n.value
+    return n.id if isinstance(n, ast.Name) else None
+
+
+def _call_attr(func: ast.AST) -> Optional[str]:
+    """Final attribute of a call target: jax.random.normal -> normal."""
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _scopes(tree: ast.AST):
+    """Yield (scope_node, own_statements) for the module and each function.
+
+    Nested function bodies are excluded from the enclosing scope's
+    statements (they get their own scope), so a key captured by a closure
+    is analyzed where it is *used*, not double-counted.
+    """
+    def own_nodes(scope) -> List[ast.AST]:
+        out: List[ast.AST] = []
+        stack = list(ast.iter_child_nodes(scope))
+        while stack:
+            node = stack.pop(0)
+            out.append(node)
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)):
+                stack.extend(ast.iter_child_nodes(node))
+        return out
+
+    yield tree, own_nodes(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, own_nodes(node)
+
+
+class PRNGKeyReuseRule(Rule):
+    """JAX01: a key variable consumed twice without a split between."""
+
+    code = "JAX01"
+
+    def check(self, tree, source, path) -> Iterable[Finding]:
+        for _scope, nodes in _scopes(tree):
+            # key variables: names assigned from jax.random.{PRNGKey,key,
+            # fold_in} or unpacked from jax.random.split
+            events: List[Tuple[int, int, str, str]] = []
+            for node in nodes:
+                if isinstance(node, ast.Assign):
+                    val = node.value
+                    is_key_maker = (
+                        isinstance(val, ast.Call)
+                        and _call_root(val.func) in ("jax", "random")
+                        and _call_attr(val.func) in ("PRNGKey", "key",
+                                                     "fold_in", "split",
+                                                     "clone"))
+                    for tgt in node.targets:
+                        names = (tgt.elts if isinstance(
+                            tgt, (ast.Tuple, ast.List)) else [tgt])
+                        for t in names:
+                            if isinstance(t, ast.Name):
+                                kind = "mk" if is_key_maker else "clear"
+                                events.append((node.lineno, node.col_offset,
+                                               kind, t.id))
+                elif isinstance(node, ast.Call):
+                    attr = _call_attr(node.func)
+                    if attr in _KEY_DERIVERS:
+                        continue
+                    if node.args and isinstance(node.args[0], ast.Name):
+                        events.append((node.lineno, node.col_offset, "use",
+                                       node.args[0].id))
+            events.sort()
+            live: Dict[str, int] = {}   # key name -> first-use line
+            for line, _col, kind, name in events:
+                if kind == "mk":
+                    live[name] = 0
+                elif kind == "clear":
+                    live.pop(name, None)
+                elif kind == "use" and name in live:
+                    first = live[name]
+                    if first:
+                        yield Finding(
+                            path, line, "JAX01",
+                            f"PRNG key {name!r} reused (first consumed at "
+                            f"line {first}); split or fold_in between uses")
+                    else:
+                        live[name] = line
+
+
+def _jit_decorator(dec: ast.AST) -> Optional[ast.Call]:
+    """Return the decorator Call if `dec` is a jax.jit application.
+
+    Recognized forms: @jax.jit / @jit (returns None-call marker via a
+    synthetic empty Call), @partial(jax.jit, ...) and
+    @functools.partial(jax.jit, ...), @jax.jit(...) directly.
+    """
+    if isinstance(dec, (ast.Name, ast.Attribute)):
+        if _call_attr(dec) == "jit":
+            return ast.Call(func=dec, args=[], keywords=[])
+        return None
+    if isinstance(dec, ast.Call):
+        if _call_attr(dec.func) == "jit":
+            return dec
+        if _call_attr(dec.func) == "partial" and dec.args:
+            if _call_attr(dec.args[0]) == "jit":
+                return dec
+    return None
+
+
+def _static_argnames(call: ast.Call) -> Optional[Set[str]]:
+    """Declared static_argnames strings; None if undeterminable."""
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            return None  # positional statics: be permissive, skip the rule
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List, ast.Set)):
+                out = set()
+                for elt in v.elts:
+                    if not (isinstance(elt, ast.Constant)
+                            and isinstance(elt.value, str)):
+                        return None
+                    out.add(elt.value)
+                return out
+            return None
+    return set()
+
+
+def _jitted_functions(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                call = _jit_decorator(dec)
+                if call is not None:
+                    yield node, call
+                    break
+
+
+def _numpy_aliases(tree: ast.AST) -> Set[str]:
+    aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "numpy":
+                    aliases.add(a.asname or "numpy")
+    return aliases
+
+
+class HostSyncRule(Rule):
+    """JAX02: device->host sync inside a jitted function body."""
+
+    code = "JAX02"
+
+    def check(self, tree, source, path) -> Iterable[Finding]:
+        np_names = _numpy_aliases(tree)
+        for fn, _call in _jitted_functions(tree):
+            params = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                      + fn.args.kwonlyargs)}
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item"):
+                    yield Finding(
+                        path, node.lineno, "JAX02",
+                        f".item() inside jitted {fn.name!r} forces a host "
+                        "sync; keep the value on device")
+                elif _call_root(node.func) in np_names:
+                    yield Finding(
+                        path, node.lineno, "JAX02",
+                        f"numpy call inside jitted {fn.name!r} materializes "
+                        "on host (np.* does not trace); use jnp")
+                elif (isinstance(node.func, ast.Name)
+                      and node.func.id in ("float", "int", "bool")
+                      and len(node.args) == 1
+                      and isinstance(node.args[0], ast.Name)
+                      and node.args[0].id in params):
+                    yield Finding(
+                        path, node.lineno, "JAX02",
+                        f"{node.func.id}() on traced argument "
+                        f"{node.args[0].id!r} inside jitted {fn.name!r} "
+                        "host-syncs (or fails under trace)")
+
+
+class MissingStaticArgRule(Rule):
+    """JAX03: jitted function with an undeclared known-static parameter."""
+
+    code = "JAX03"
+
+    def check(self, tree, source, path) -> Iterable[Finding]:
+        for fn, call in _jitted_functions(tree):
+            declared = _static_argnames(call)
+            if declared is None:
+                continue
+            params = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                      + fn.args.kwonlyargs)]
+            missing = [p for p in params
+                       if p in KNOWN_STATIC_PARAMS and p not in declared]
+            if missing:
+                yield Finding(
+                    path, fn.lineno, "JAX03",
+                    f"jitted {fn.name!r} takes known-static "
+                    f"{sorted(missing)} but static_argnames omits "
+                    "them (recompile-per-value or unhashable-trace risk)")
+
+
+class BareTopKRule(Rule):
+    """JAX04: lax.top_k outside the sentinel-padded scan engine."""
+
+    code = "JAX04"
+
+    def check(self, tree, source, path) -> Iterable[Finding]:
+        if path.replace("\\", "/").endswith(SCAN_ENGINE_SUFFIX[0]):
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _call_attr(node.func) != "top_k":
+                continue
+            root = _call_root(node.func)
+            if root not in ("lax", "jax"):
+                continue
+            yield Finding(
+                path, node.lineno, "JAX04",
+                "bare lax.top_k crashes when k > input length; route "
+                "through core/scan.py's padded merge, or add "
+                "`# noqa: JAX04` with the static k <= N argument")
+
+
+JAX_RULES = (PRNGKeyReuseRule(), HostSyncRule(), MissingStaticArgRule(),
+             BareTopKRule())

@@ -1,0 +1,262 @@
+"""Declarative memory-budget manifests for every search entry point.
+
+Each ``BudgetManifest`` registers one hot-path entry point with the jaxpr
+budget analyzer (``repro.analysis.jaxpr_budget``): a ``trace`` callable
+returning ``(fn, args)`` built from ``jax.ShapeDtypeStruct`` leaves at a
+given corpus size, plus the contract numbers the traced program must
+honor:
+
+  * ``max_block_bytes`` — the largest intermediate whose size does NOT
+    grow with the corpus (the blocked-scan working set). PR 5's
+    hand-written 64 MB `search_flat` test is the `search_flat` entry
+    here.
+  * ``max_bytes_per_doc`` — the growth-per-document allowance for
+    intermediates that DO scale with N. Doc ids (4 B), validity masks
+    (1 B) and code-payload handling fit; a (B, N) float score matrix
+    (32 B/doc at B=8) or the unblocked (B, Mq, N, Md) gather (~2 KB/doc)
+    do not.
+  * ``out_dtypes`` — the result dtype contract: float32 scores + int32
+    doc ids everywhere except hamming, whose popcount scores stay int32
+    end to end.
+
+The trace geometry is deliberately small everywhere except N (B=8, Mq=8,
+Md=16, D=16, K=256): budgets scale linearly in those, and a small
+constant footprint keeps the corpus-scaling term — the thing the
+analyzer exists to catch — from hiding under block-working-set noise.
+``n`` and ``n_alt`` are both multiples of every block/bucket/beam size in
+play, so the two traces are structurally identical and intermediates
+pair positionally.
+
+Registering a new entry point (docs/design.md §8): implement
+``IndexBackend.abstract_state`` for the backend, add a ``BudgetManifest``
+to ``_MANIFESTS`` with a trace builder, and pick the two budget numbers
+from the entry point's design envelope — not from what it happens to
+allocate today.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import scan as scan_mod
+from repro.retrieval.base import Query, code_dtype, get_backend
+from repro.retrieval.config import HPCConfig
+from repro.retrieval.retriever import Retriever
+
+__all__ = ["BudgetManifest", "get_manifest", "manifests"]
+
+# Trace geometry: small constants, symbolic-large corpus.
+B = 8          # query batch
+MQ = 8         # query patches
+MD = 16        # doc patches
+D = 16         # embedding dim
+K = 256        # codebook size
+TOP_K = 16     # result depth
+RERANK = 64    # facade rerank candidate depth
+N = 1 << 20    # corpus size (primary trace)
+N_ALT = 1 << 19  # secondary trace for growth classification
+IVF_N_LIST = 1024  # routing clusters at corpus scale (cap = 2N/n_list)
+
+# The analyzer pins the jnp block scorer: the Pallas path lowers to a
+# custom call whose jaxpr hides its internals, while the jnp path
+# exposes every intermediate the budget must bound. Same block size as
+# the production default.
+SCAN = scan_mod.ScanConfig(block_docs=256, impl="jnp")
+
+MiB = 2**20
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetManifest:
+    """One entry point's memory/dtype contract (see module docstring)."""
+
+    name: str
+    trace: Callable[[int], Tuple[Callable, tuple]]
+    max_block_bytes: int = 64 * MiB
+    max_bytes_per_doc: float = 16.0
+    out_dtypes: Optional[Tuple] = (jnp.float32, jnp.int32)
+    n: int = N
+    n_alt: int = N_ALT
+    notes: str = ""
+
+
+def abstract_query(b: int = B, mq: int = MQ, d: int = D) -> Query:
+    """Shape-only Query matching the trace geometry."""
+    sds = jax.ShapeDtypeStruct
+    return Query(embeddings=sds((b, mq, d), jnp.float32),
+                 mask=sds((b, mq), jnp.bool_),
+                 salience=sds((b, mq), jnp.float32))
+
+
+def _backend_trace(backend_name: str, **knobs):
+    """Trace builder for `backend.search` over its abstract state."""
+    def trace(n: int):
+        backend = get_backend(backend_name)
+        state = backend.abstract_state(n=n, md=MD, d=D, k=K, **knobs)
+        query = abstract_query()
+
+        def fn(state, query):
+            return backend.search(state, query, k=TOP_K, scan=SCAN)
+        return fn, (state, query)
+    return trace
+
+
+def _rerank_trace(n: int):
+    """Facade rerank: gather candidate codes, rescore unpruned."""
+    r = Retriever(HPCConfig(backend="flat", scan_block_docs=SCAN.block_docs,
+                            scan_impl=SCAN.impl))
+    state = get_backend("flat").abstract_state(n=n, md=MD, d=D, k=K)
+    query = abstract_query()
+    sds = jax.ShapeDtypeStruct
+    scores = sds((B, RERANK), jnp.float32)
+    ids = sds((B, RERANK), jnp.int32)
+
+    def fn(state, query, scores, ids):
+        return r._rerank(state, query, scores, ids, k=TOP_K)
+    return fn, (state, query, scores, ids)
+
+
+def _scan_quantized_shared_trace(n: int):
+    """The scan engine itself, shared-corpus layout (flat's hot path)."""
+    sds = jax.ShapeDtypeStruct
+    q = abstract_query()
+    codes = sds((n, MD), code_dtype(K))
+    mask = sds((n, MD), jnp.bool_)
+    cb = sds((K, D), jnp.float32)
+
+    def fn(qe, qm, codes, mask, cb):
+        return scan_mod.quantized_maxsim_topk(qe, qm, codes, mask, cb,
+                                              k=TOP_K, scan=SCAN)
+    return fn, (q.embeddings, q.mask, codes, mask, cb)
+
+
+def _scan_quantized_per_query_trace(n: int):
+    """Per-query candidate-pool layout (ivf buckets / hnsw beam / rerank).
+
+    `n` is the per-query pool size here — the layout's corpus-scaling
+    axis — so growth classification bounds bytes per pooled candidate.
+    """
+    sds = jax.ShapeDtypeStruct
+    q = abstract_query()
+    codes = sds((B, n, MD), code_dtype(K))
+    mask = sds((B, n, MD), jnp.bool_)
+    cb = sds((K, D), jnp.float32)
+    ids = sds((B, n), jnp.int32)
+    valid = sds((B, n), jnp.bool_)
+
+    def fn(qe, qm, codes, mask, cb, ids, valid):
+        return scan_mod.quantized_maxsim_topk(qe, qm, codes, mask, cb,
+                                              k=TOP_K, doc_ids=ids,
+                                              valid=valid, scan=SCAN)
+    return fn, (q.embeddings, q.mask, codes, mask, cb, ids, valid)
+
+
+def _scan_maxsim_trace(n: int):
+    """Float scan over an uncompressed (N, Md, D) corpus."""
+    sds = jax.ShapeDtypeStruct
+    q = abstract_query()
+    docs = sds((n, MD, D), jnp.float32)
+    mask = sds((n, MD), jnp.bool_)
+
+    def fn(qe, qm, docs, mask):
+        return scan_mod.maxsim_topk(qe, qm, docs, mask, k=TOP_K, scan=SCAN)
+    return fn, (q.embeddings, q.mask, docs, mask)
+
+
+def _scan_hamming_trace(n: int):
+    """Popcount scan over b-bit binary codes (int32 scores)."""
+    sds = jax.ShapeDtypeStruct
+    q_codes = sds((B, MQ), jnp.uint8)
+    q_mask = sds((B, MQ), jnp.bool_)
+    d_codes = sds((n, MD), jnp.uint8)
+    d_mask = sds((n, MD), jnp.bool_)
+
+    def fn(qc, qm, dc, dm):
+        return scan_mod.hamming_maxsim_topk(qc, qm, dc, dm, bits=8,
+                                            k=TOP_K, scan=SCAN)
+    return fn, (q_codes, q_mask, d_codes, d_mask)
+
+
+_MANIFESTS: Dict[str, BudgetManifest] = {}
+
+
+def _register(m: BudgetManifest) -> None:
+    if m.name in _MANIFESTS:
+        raise ValueError(f"duplicate manifest {m.name!r}")
+    _MANIFESTS[m.name] = m
+
+
+for _m in (
+    BudgetManifest(
+        name="search_flat",
+        trace=_backend_trace("flat"),
+        notes="PR 5's hand-written 64 MB jaxpr test, as a manifest. The "
+              "blocked scan may keep doc ids / validity O(N); the (B, N) "
+              "score matrix (32 B/doc at B=8) must never come back."),
+    BudgetManifest(
+        name="search_float_flat",
+        trace=_backend_trace("float_flat"),
+        notes="Uncompressed baseline: the (N, Md, D) corpus is an input, "
+              "not an intermediate — blocks of it are sliced, never "
+              "padded/copied whole."),
+    BudgetManifest(
+        name="search_hamming",
+        trace=_backend_trace("hamming"),
+        out_dtypes=(jnp.int32, jnp.int32),
+        notes="Popcount MaxSim: scores stay int32 end to end (the dtype "
+              "contract half of this entry)."),
+    BudgetManifest(
+        name="search_ivf",
+        trace=_backend_trace("ivf", n_list=IVF_N_LIST, n_probe=8),
+        notes="Probed-bucket gathers scale with bucket cap = 2N/n_list: "
+              "~2 B/doc each for codes+mask at n_list=1024, n_probe=8."),
+    BudgetManifest(
+        name="search_hnsw",
+        trace=_backend_trace("hnsw"),
+        notes="The beam's visited bitmask is (B, N) bool = 8 B/doc at "
+              "B=8; everything else is O(ef_search)."),
+    BudgetManifest(
+        name="retriever_rerank",
+        trace=_rerank_trace,
+        notes="Candidate gather from the unpruned (N, Md) code corpus: "
+              "all intermediates are O(B * rerank depth), none scale "
+              "with N."),
+    BudgetManifest(
+        name="scan_quantized_shared",
+        trace=_scan_quantized_shared_trace,
+        notes="The scan engine itself, shared-corpus layout."),
+    BudgetManifest(
+        name="scan_quantized_per_query",
+        trace=_scan_quantized_per_query_trace,
+        max_bytes_per_doc=48.0,
+        notes="Per-query pools carry (B, P) ids/valid by construction: "
+              "B * 5 B per pooled candidate before scoring starts."),
+    BudgetManifest(
+        name="scan_maxsim",
+        trace=_scan_maxsim_trace,
+        notes="Float scan: block slices of the fp32 corpus are the "
+              "working set; nothing else may scale with N."),
+    BudgetManifest(
+        name="scan_hamming",
+        trace=_scan_hamming_trace,
+        out_dtypes=(jnp.int32, jnp.int32),
+        notes="Binary scan: int32 popcount scores, packed-code blocks."),
+):
+    _register(_m)
+
+
+def manifests() -> Tuple[BudgetManifest, ...]:
+    """Every registered manifest, name-ordered (stable CLI/CI output)."""
+    return tuple(_MANIFESTS[k] for k in sorted(_MANIFESTS))
+
+
+def get_manifest(name: str) -> BudgetManifest:
+    try:
+        return _MANIFESTS[name]
+    except KeyError:
+        raise KeyError(
+            f"no manifest {name!r}; registered: {sorted(_MANIFESTS)}"
+        ) from None

@@ -1,0 +1,159 @@
+"""Recompile sentry: jit-cache growth as a checked contract.
+
+The serving ladder's whole point is a *closed* set of compiled shapes —
+B in the power-of-two ladder times the query geometries actually served.
+jax.jit enforces none of that: a float that arrives weak-typed one call
+and strong-typed the next, a knob that should be static but traces, or a
+batch that skipped the ladder padding each mint a fresh executable, and
+the cache grows without bound while p99 eats the compile stalls.
+
+``RecompileSentry`` wraps a jitted entry point and maintains the set of
+distinct call signatures it has seen (by default: pytree structure +
+per-leaf (shape, dtype, weak_type) — exactly the jit cache key's shape
+axis). Three enforcement modes compose:
+
+  * ``allowed``  — a predicate over the signature; violating calls raise
+    ``RecompileGuardError`` *before* hitting the jit cache.
+  * ``expected`` — a closed signature set; ``assert_signatures`` checks
+    exact equality after a warmup / serve run (the ladder "compiles
+    exactly its declared rung set" gate).
+  * ``max_signatures`` — a hard cardinality cap for soak runs.
+
+``check_cache_consistent`` cross-checks the wrapped function's own
+``_cache_size()`` against the sentry's distinct-signature count: a cache
+strictly larger than what the sentry saw means something below the
+sentry key is splitting entries — the weak-dtype leak this module exists
+to catch.
+
+Serving integration: ``ServeConfig(guard_recompiles=True)`` wraps the
+server's search_fn in a sentry keyed on (B, Mq, arg dtypes) and allows
+only ladder rungs as batch sizes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterable, Optional, Tuple, Union
+
+import jax
+
+__all__ = [
+    "RecompileGuardError",
+    "RecompileSentry",
+    "abstract_signature",
+    "ladder_signatures",
+]
+
+
+class RecompileGuardError(RuntimeError):
+    """A jitted entry point compiled outside its declared signature set."""
+
+
+def _leaf_spec(leaf: Any) -> Tuple:
+    if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+        return (tuple(leaf.shape), str(leaf.dtype),
+                bool(getattr(leaf, "weak_type", False)))
+    if isinstance(leaf, (bool, int, float, str, bytes, type(None))):
+        # python scalars are weak-typed under jit: keep the value's type
+        # visible so an int/float flip shows up as a distinct signature
+        return ("py", type(leaf).__name__, leaf)
+    return ("py", type(leaf).__name__, repr(leaf))
+
+
+def abstract_signature(*args, **kwargs) -> Tuple:
+    """Hashable structural signature of a call: treedef + leaf specs.
+
+    Mirrors the axes of jax.jit's cache key that shape-stable serving
+    controls: pytree structure, per-leaf shape/dtype and — crucially —
+    weak_type, the classic silent cache-splitter.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+    return (str(treedef), tuple(_leaf_spec(x) for x in leaves))
+
+
+def ladder_signatures(ladder: Iterable[int],
+                      mq: Union[int, Iterable[int]]) -> frozenset:
+    """The closed (B, Mq) signature set a serving ladder may compile."""
+    mqs = (mq,) if isinstance(mq, int) else tuple(mq)
+    return frozenset((int(b), int(m)) for b in ladder for m in mqs)
+
+
+class RecompileSentry:
+    """Wrap a callable; count and gate its distinct call signatures."""
+
+    def __init__(self, fn: Callable, *, name: Optional[str] = None,
+                 key_fn: Optional[Callable[..., Tuple]] = None,
+                 expected: Optional[Iterable] = None,
+                 allowed: Optional[Callable[[Tuple], bool]] = None,
+                 max_signatures: Optional[int] = None):
+        self.fn = fn
+        self.name = name or getattr(fn, "__name__", repr(fn))
+        self.key_fn = key_fn or abstract_signature
+        self.expected = frozenset(expected) if expected is not None else None
+        self.allowed = allowed
+        self.max_signatures = max_signatures
+        self.calls = 0
+        self.signatures: Dict[Tuple, int] = {}  # signature -> call count
+
+    def __call__(self, *args, **kwargs):
+        key = self.key_fn(*args, **kwargs)
+        # gate BEFORE recording: a rejected call never reaches the jit
+        # cache, so it must not count as a seen signature either
+        if self.allowed is not None and not self.allowed(key):
+            raise RecompileGuardError(
+                f"{self.name}: signature {key!r} rejected by the allowed "
+                "predicate (off-ladder batch shape or dtype drift)")
+        if self.expected is not None and key not in self.expected:
+            raise RecompileGuardError(
+                f"{self.name}: unexpected signature {key!r}; declared set "
+                f"has {len(self.expected)} entries")
+        self.calls += 1
+        fresh = key not in self.signatures
+        self.signatures[key] = self.signatures.get(key, 0) + 1
+        if (self.max_signatures is not None and fresh
+                and len(self.signatures) > self.max_signatures):
+            raise RecompileGuardError(
+                f"{self.name}: {len(self.signatures)} distinct signatures "
+                f"> max_signatures={self.max_signatures} (unbounded jit "
+                "cache growth)")
+        return self.fn(*args, **kwargs)
+
+    # -- post-run gates -----------------------------------------------------
+
+    def assert_signatures(self, expected: Iterable) -> None:
+        """Exact-set gate: the entry point compiled its declared rung set,
+        the whole set, and nothing but the set."""
+        want = frozenset(expected)
+        got = frozenset(self.signatures)
+        if got != want:
+            extra = sorted(map(repr, got - want))
+            missing = sorted(map(repr, want - got))
+            raise RecompileGuardError(
+                f"{self.name}: signature set mismatch; "
+                f"unexpected={extra or 'none'} missing={missing or 'none'}")
+
+    def check_cache_consistent(self) -> int:
+        """Cross-check fn's jit cache size against the sentry count.
+
+        Returns the cache size. A cache strictly larger than the distinct
+        signatures seen here means jit is splitting entries on an axis
+        the sentry key missed — in practice a weak-dtype or non-static
+        argument leak below the serving layer.
+        """
+        cache_size = getattr(self.fn, "_cache_size", None)
+        if cache_size is None:
+            return len(self.signatures)
+        n = cache_size()
+        if n > len(self.signatures):
+            raise RecompileGuardError(
+                f"{self.name}: jit cache holds {n} entries but only "
+                f"{len(self.signatures)} distinct signatures were seen — "
+                "an argument axis outside the sentry key (weak dtype, "
+                "non-static knob) is splitting the cache")
+        return n
+
+    def report(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "calls": self.calls,
+            "n_signatures": len(self.signatures),
+            "signatures": {repr(k): v for k, v in self.signatures.items()},
+        }

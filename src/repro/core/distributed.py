@@ -102,7 +102,8 @@ def sharded_search_fn(mesh: Mesh, corpus_axes: Tuple[str, ...], *, k: int,
         scores = jax.lax.map(score_block, blocks)              # (nb, B, blk)
         scores = jnp.moveaxis(scores, 0, 1).reshape(q.shape[0], n_local)
         local_k = min(k, codes.shape[0])
-        top_s, top_i = jax.lax.top_k(scores, local_k)          # (B, local_k)
+        # JAX04-safe: local_k = min(k, shard size) just above
+        top_s, top_i = jax.lax.top_k(scores, local_k)  # noqa: JAX04
         top_ids = doc_ids[top_i]
         # Global merge: gather every shard's candidates, re-top-k.
         all_s = top_s
@@ -110,7 +111,9 @@ def sharded_search_fn(mesh: Mesh, corpus_axes: Tuple[str, ...], *, k: int,
         for ax in corpus_axes:
             all_s = jax.lax.all_gather(all_s, ax, axis=1, tiled=True)
             all_i = jax.lax.all_gather(all_i, ax, axis=1, tiled=True)
-        g_s, g_pos = jax.lax.top_k(all_s, k)
+        # JAX04-safe: callers cap k at the global corpus size, and the
+        # gathered axis holds local_k * n_shards >= min(k, N) entries
+        g_s, g_pos = jax.lax.top_k(all_s, k)  # noqa: JAX04
         g_i = jnp.take_along_axis(all_i, g_pos, axis=1)
         return g_s, g_i
 
@@ -166,12 +169,14 @@ def sharded_kmeans_refine_fn(mesh: Mesh, data_axes: Tuple[str, ...], *,
 
     def repair(x, centroids, cnts, min_d2):
         kk = min(k, x.shape[0])
-        far_d, far_i = jax.lax.top_k(min_d2, kk)
+        # JAX04-safe: kk = min(k, shard size) just above
+        far_d, far_i = jax.lax.top_k(min_d2, kk)  # noqa: JAX04
         far_x = x[far_i]                                   # (kk, D)
         for ax in data_axes:
             far_d = jax.lax.all_gather(far_d, ax, axis=0, tiled=True)
             far_x = jax.lax.all_gather(far_x, ax, axis=0, tiled=True)
-        g_d, g_pos = jax.lax.top_k(far_d, min(k, far_d.shape[0]))
+        # JAX04-safe: k clamped to the gathered axis length inline
+        g_d, g_pos = jax.lax.top_k(far_d, min(k, far_d.shape[0]))  # noqa: JAX04
         cand = far_x[g_pos]                                # global farthest
         dead = cnts <= 0
         rank = jnp.clip(jnp.cumsum(dead.astype(jnp.int32)) - 1, 0,

@@ -270,7 +270,8 @@ def _beam_level0(doc_vecs: Array, nbrs0: Array, q: Array, entry: Array,
         all_ids = jnp.concatenate([ids, jnp.where(fresh, nb_s, -1)])
         all_ds = jnp.concatenate([ds, nd])
         all_exp = jnp.concatenate([exp, jnp.zeros((width,), bool)])
-        _, order = jax.lax.top_k(-all_ds, ef)
+        # JAX04-safe: all_ds has ef + width entries, always >= ef
+        _, order = jax.lax.top_k(-all_ds, ef)  # noqa: JAX04
         return (all_ids[order], all_ds[order], all_exp[order], visited), None
 
     (ids, ds, _, _), _ = jax.lax.scan(step, (ids0, ds0, exp0, visited0),

@@ -217,7 +217,10 @@ def search_ivf(index: IVFIndex, q: Array, q_mask: Array, *, n_probe: int,
     # is constant per query, so 2<q,c> - ||c||^2 preserves the ordering.
     route = (2.0 * (q_vec @ index.routing_centroids.T)
              - jnp.sum(index.routing_centroids ** 2, axis=-1)[None, :])
-    _, probe = jax.lax.top_k(route, n_probe)                  # (B, n_probe)
+    # clamp the static probe count: n_probe > n_list would crash top_k
+    # (JAX04) — probing every bucket is the correct degenerate behaviour
+    n_probe = min(n_probe, index.routing_centroids.shape[0])
+    _, probe = jax.lax.top_k(route, n_probe)  # noqa: JAX04 - clamped above
 
     cand_codes = index.bucket_codes[probe]      # (B, n_probe, cap, Md)
     cand_mask = index.bucket_mask[probe]

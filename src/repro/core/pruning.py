@@ -56,7 +56,8 @@ def prune_topp(embeddings: Array, salience: Array, mask: Array,
     m = embeddings.shape[-2]
     m_keep = keep_count(m, p)
     masked_sal = jnp.where(mask, salience, NEG_INF)
-    top_sal, top_idx = jax.lax.top_k(masked_sal, m_keep)        # (..., M_keep)
+    # JAX04-safe: keep_count guarantees m_keep <= M (patch axis length)
+    top_sal, top_idx = jax.lax.top_k(masked_sal, m_keep)  # noqa: JAX04
     kept_mask = top_sal > NEG_INF / 2
     kept_emb = jnp.take_along_axis(embeddings, top_idx[..., None], axis=-2)
     kept_emb = kept_emb * kept_mask[..., None].astype(kept_emb.dtype)
@@ -71,7 +72,8 @@ def prune_topp_codes(codes: Array, salience: Array, mask: Array,
     m = codes.shape[-1]
     m_keep = keep_count(m, p)
     masked_sal = jnp.where(mask, salience, NEG_INF)
-    top_sal, top_idx = jax.lax.top_k(masked_sal, m_keep)
+    # JAX04-safe: keep_count guarantees m_keep <= M (patch axis length)
+    top_sal, top_idx = jax.lax.top_k(masked_sal, m_keep)  # noqa: JAX04
     kept_mask = top_sal > NEG_INF / 2
     kept_codes = jnp.take_along_axis(codes, top_idx, axis=-1)
     return kept_codes, top_idx.astype(jnp.int32), kept_mask, top_sal

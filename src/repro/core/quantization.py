@@ -133,7 +133,8 @@ def _repair_dead_centroids(x: Array, centroids: Array, counts: Array,
     """
     k = centroids.shape[0]
     kk = min(k, x.shape[0])
-    _, far_idx = jax.lax.top_k(min_d2, kk)               # farthest points
+    # JAX04-safe: kk = min(k, N) just above
+    _, far_idx = jax.lax.top_k(min_d2, kk)  # noqa: JAX04 - farthest points
     dead = counts <= 0
     rank = jnp.clip(jnp.cumsum(dead.astype(jnp.int32)) - 1, 0, kk - 1)
     repl = x[far_idx[rank]]

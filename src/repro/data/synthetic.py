@@ -252,7 +252,7 @@ def make_graph(key: Array, n_nodes: int, n_edges: int, d_feat: int,
                n_classes: int, n_comm: int = 8) -> Dict[str, Array]:
     """Community-structured graph: labels correlate with communities and
     features correlate with labels (so PNA can learn)."""
-    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
     comm = jax.random.randint(k1, (n_nodes,), 0, n_comm)
     # intra-community edges (80%) + random (20%)
     n_intra = int(n_edges * 0.8)
@@ -268,8 +268,8 @@ def make_graph(key: Array, n_nodes: int, n_edges: int, d_feat: int,
     src = jnp.concatenate([src_i, src_r])
     dst = jnp.concatenate([dst_i, dst_r])
     labels = comm % n_classes
-    centers = jax.random.normal(k1, (n_classes, d_feat))
-    feats = centers[labels] + 0.8 * jax.random.normal(k2, (n_nodes, d_feat))
+    centers = jax.random.normal(k6, (n_classes, d_feat))
+    feats = centers[labels] + 0.8 * jax.random.normal(k7, (n_nodes, d_feat))
     return {"feats": feats.astype(jnp.float32),
             "edge_index": jnp.stack([src, dst]).astype(jnp.int32),
             "labels": labels.astype(jnp.int32)}

@@ -51,9 +51,9 @@ def main(argv=None):
                     help="v1 behaviour: pad every batch to --max-batch")
     args = ap.parse_args(argv)
 
-    key = jax.random.PRNGKey(0)
+    k_data, k_build = jax.random.split(jax.random.PRNGKey(0))
     spec = synthetic.CorpusSpec(n_docs=args.n_docs, n_queries=args.queries)
-    data = synthetic.make_retrieval_corpus(key, spec)
+    data = synthetic.make_retrieval_corpus(k_data, spec)
 
     backend = args.backend
     if backend is None and args.mode is None and args.index is None:
@@ -64,8 +64,8 @@ def main(argv=None):
     retriever = Retriever(cfg)
 
     t0 = time.perf_counter()
-    state = retriever.build(key, Corpus(data.doc_patches, data.doc_mask,
-                                        data.doc_salience))
+    state = retriever.build(k_build, Corpus(data.doc_patches, data.doc_mask,
+                                            data.doc_salience))
     jax.block_until_ready(state.codebook)
     print(f"index[{cfg.backend}] built in {time.perf_counter()-t0:.2f}s | "
           f"storage {retriever.storage_bytes(state)}")

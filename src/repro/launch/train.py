@@ -48,27 +48,29 @@ def main(argv=None):
 
     spec = registry.get(args.arch)
     cfg = spec.smoke_config if args.smoke else spec.config
-    key = jax.random.PRNGKey(0)
+    k_init, k_data = jax.random.split(jax.random.PRNGKey(0))
     ocfg = opt.AdamWConfig(lr=args.lr, total_steps=args.steps,
                            warmup_steps=max(1, args.steps // 10))
 
     if spec.family == "lm":
-        params = T.init(key, cfg)
+        params = T.init(k_init, cfg)
         opt_state = opt.init(ocfg, params)
         step = jax.jit(lambda p, o, b: T.train_step(p, o, b, cfg, ocfg))
         mk = lambda k: synthetic.make_lm_batch(k, cfg.vocab, args.batch,
                                                args.seq)
     elif spec.family == "gnn":
         cfg2 = cfg
-        params = gnn_mod.init(key, cfg2)
+        # exclusive elif branch: k_init consumed once per run
+        params = gnn_mod.init(k_init, cfg2)  # noqa: JAX01
         opt_state = opt.init(ocfg, params)
         step = jax.jit(lambda p, o, b: gnn_mod.train_step(p, o, b, cfg2,
                                                           ocfg))
-        g = synthetic.make_graph(key, 512, 2048, cfg2.d_feat,
+        g = synthetic.make_graph(k_data, 512, 2048, cfg2.d_feat,
                                  cfg2.n_classes)
         mk = lambda k: g
     elif spec.family == "recsys":
-        params = recsys_mod.init(key, cfg)
+        # exclusive elif branch: k_init consumed once per run
+        params = recsys_mod.init(k_init, cfg)  # noqa: JAX01
         opt_state = opt.init(ocfg, params)
         step = jax.jit(lambda p, o, b: recsys_mod.train_step(p, o, b, cfg,
                                                              ocfg))
@@ -77,7 +79,8 @@ def main(argv=None):
             seq_len=cfg.seq_len, family=cfg.family)
     else:  # colpali
         enc = cfg.encoder
-        params = colpali_mod.init(key, enc)
+        # exclusive elif branch: k_init consumed once per run
+        params = colpali_mod.init(k_init, enc)  # noqa: JAX01
         opt_state = opt.init(ocfg, params)
         step = jax.jit(lambda p, o, b: colpali_mod.train_step(p, o, b, enc,
                                                               ocfg))

@@ -355,7 +355,8 @@ def moe_apply(p: Dict[str, Array], x: Array, *, top_k: int,
     logits = jnp.einsum("gtd,de->gte", xg_tok.astype(jnp.float32),
                         p["router"])                       # (G, Tg, E)
     probs = jax.nn.softmax(logits, axis=-1)
-    gate, idx = jax.lax.top_k(probs, top_k)                # (G, Tg, k)
+    # JAX04-safe: router top_k <= n_experts by MoE config contract
+    gate, idx = jax.lax.top_k(probs, top_k)  # noqa: JAX04 - (G, Tg, k)
     gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
 
     flat_e = idx.reshape(g, tg * top_k)

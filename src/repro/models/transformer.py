@@ -130,7 +130,8 @@ def _layer_init(key: Array, cfg: LMConfig) -> Dict[str, Any]:
         p["moe"] = L.moe_init(k2, cfg.d_model, cfg.moe_d_ff, cfg.n_experts,
                               cfg.n_shared_experts, cfg.pdtype)
     else:
-        p["ffn"] = L.ffn_init(k2, cfg.d_model, cfg.d_ff, cfg.pdtype)
+        # exclusive if/else: k2 feeds either the MoE or the FFN, never both
+        p["ffn"] = L.ffn_init(k2, cfg.d_model, cfg.d_ff, cfg.pdtype)  # noqa: JAX01
     return p
 
 

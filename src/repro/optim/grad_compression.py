@@ -85,7 +85,8 @@ def topk_compress(grads: PyTree, state: TopKState, frac: float
         acc = g.astype(jnp.float32) + r
         k = max(1, int(acc.size * frac))
         flat = acc.reshape(-1)
-        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        # JAX04-safe: k = max(1, size * frac) <= size for frac <= 1
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)  # noqa: JAX04
         kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
         return kept.reshape(g.shape), acc - kept.reshape(g.shape)
 

@@ -270,6 +270,22 @@ class IndexBackend:
         """
         return {}
 
+    def abstract_state(self, *, n: int, md: int = 16, d: int = 16,
+                       k: int = 256, **knobs) -> RetrieverState:
+        """Shape-only `RetrieverState` at corpus size `n` (no allocation).
+
+        The static-analysis registration hook (docs/design.md §8): every
+        leaf is a `jax.ShapeDtypeStruct`, so `repro.analysis` can trace
+        `search` against a 2^20-document corpus and walk the jaxpr
+        without ever building an index. `knobs` carries backend-specific
+        structure parameters (ivf: n_list/n_probe, hnsw: levels/m/
+        ef_search, hamming: bits) — the same statics a real build would
+        bake in, so the traced program matches production.
+        """
+        raise NotImplementedError(
+            f"backend {self.name!r} must define abstract_state to register "
+            "with the jaxpr budget analyzer (repro.analysis.manifests)")
+
     # -- sharding -----------------------------------------------------------
 
     def shard_specs(self, state: RetrieverState):

@@ -9,9 +9,11 @@ from typing import Dict, Tuple
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.core import index as index_mod
 from repro.retrieval.base import (Corpus, IndexBackend, Query,
-                                  RetrieverState, encode_corpus,
+                                  RetrieverState, code_dtype, encode_corpus,
                                   register_backend)
 from repro.retrieval.config import HPCConfig
 
@@ -42,6 +44,20 @@ class FlatBackend(IndexBackend):
         cb = state.codebook
         return {"payload": codes.size * codes.dtype.itemsize,
                 "codebook": cb.size * cb.dtype.itemsize}
+
+    def abstract_state(self, *, n: int, md: int = 16, d: int = 16,
+                       k: int = 256, **knobs) -> RetrieverState:
+        sds, cdt = jax.ShapeDtypeStruct, code_dtype(k)
+        ix = index_mod.FlatIndex(
+            codes=sds((n, md), cdt),
+            mask=sds((n, md), jnp.bool_),
+            codebook=sds((k, d), jnp.float32),
+            doc_ids=sds((n,), jnp.int32))
+        return RetrieverState(
+            codebook=sds((k, d), jnp.float32),
+            backend_state=ix,
+            rerank_codes=sds((n, md), cdt),
+            rerank_mask=sds((n, md), jnp.bool_))
 
     def state_template(self, aux) -> RetrieverState:
         return RetrieverState(0, index_mod.FlatIndex(0, 0, 0, 0), 0, 0)

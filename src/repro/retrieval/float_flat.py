@@ -48,5 +48,18 @@ class FloatFlatBackend(IndexBackend):
         e = state.backend_state.embeddings
         return {"payload": e.size * e.dtype.itemsize}
 
+    def abstract_state(self, *, n: int, md: int = 16, d: int = 16,
+                       k: int = 256, **knobs) -> RetrieverState:
+        sds = jax.ShapeDtypeStruct
+        ix = index_mod.FloatFlatIndex(
+            embeddings=sds((n, md, d), jnp.float32),
+            mask=sds((n, md), jnp.bool_),
+            doc_ids=sds((n,), jnp.int32))
+        return RetrieverState(
+            codebook=sds((1, d), jnp.float32),
+            backend_state=ix,
+            rerank_codes=sds((n, 1), jnp.uint8),
+            rerank_mask=sds((n, 1), jnp.bool_))
+
     def state_template(self, aux) -> RetrieverState:
         return RetrieverState(0, index_mod.FloatFlatIndex(0, 0, 0), 0, 0)

@@ -10,6 +10,7 @@ import dataclasses
 from typing import Dict, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import binary as binary_mod
 from repro.core import index as index_mod
@@ -66,6 +67,21 @@ class HammingBackend(IndexBackend):
         cb = state.codebook
         return {"payload": binary_mod.packed_nbytes(n_codes, s.bits),
                 "codebook": cb.size * cb.dtype.itemsize}
+
+    def abstract_state(self, *, n: int, md: int = 16, d: int = 16,
+                       k: int = 256, **knobs) -> RetrieverState:
+        bits = knobs.get("bits", binary_mod.bits_for_k(k))
+        sds, cdt = jax.ShapeDtypeStruct, code_dtype(1 << bits)
+        ix = index_mod.HammingIndex(
+            codes=sds((n, md), cdt),
+            mask=sds((n, md), jnp.bool_),
+            doc_ids=sds((n,), jnp.int32),
+            bits=sds((), jnp.int32))
+        return RetrieverState(
+            codebook=sds((k, d), jnp.float32),
+            backend_state=HammingState(ix, bits),
+            rerank_codes=sds((n, md), cdt),
+            rerank_mask=sds((n, md), jnp.bool_))
 
     def _state_aux(self, state: RetrieverState):
         return state.backend_state.bits

@@ -76,6 +76,29 @@ class HNSWBackend(IndexBackend):
                 "levels": int(ix.neighbors.shape[0]),
                 "entry_level": int(ix.node_level[ix.entry])}
 
+    def abstract_state(self, *, n: int, md: int = 16, d: int = 16,
+                       k: int = 256, **knobs) -> RetrieverState:
+        from repro.retrieval.base import code_dtype
+        cfg = graph_mod.HNSWConfig()
+        levels = knobs.get("levels", cfg.levels)
+        m = knobs.get("m", cfg.m)
+        ef_search = knobs.get("ef_search", cfg.ef_search)
+        sds, cdt = jax.ShapeDtypeStruct, code_dtype(k)
+        ix = graph_mod.HNSWIndex(
+            doc_vecs=sds((n, d), jnp.float32),
+            neighbors=sds((levels, n, 2 * m), jnp.int32),
+            entry=sds((), jnp.int32),
+            node_level=sds((n,), jnp.int32),
+            codes=sds((n, md), cdt),
+            mask=sds((n, md), jnp.bool_),
+            doc_ids=sds((n,), jnp.int32),
+            codebook=sds((k, d), jnp.float32))
+        return RetrieverState(
+            codebook=sds((k, d), jnp.float32),
+            backend_state=HNSWState(ix, ef_search),
+            rerank_codes=sds((n, md), cdt),
+            rerank_mask=sds((n, md), jnp.bool_))
+
     def _state_aux(self, state: RetrieverState):
         return state.backend_state.ef_search
 

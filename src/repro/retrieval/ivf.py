@@ -13,10 +13,11 @@ import warnings
 from typing import Dict, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import index as index_mod
 from repro.retrieval.base import (Corpus, IndexBackend, Query,
-                                  RetrieverState, encode_corpus,
+                                  RetrieverState, code_dtype, encode_corpus,
                                   register_backend)
 from repro.retrieval.config import HPCConfig
 
@@ -86,6 +87,26 @@ class IVFBackend(IndexBackend):
         return {"ivf_drop_rate": index_mod.ivf_drop_rate(ix, n_docs),
                 "n_list": int(ix.bucket_valid.shape[0]),
                 "bucket_cap": int(ix.bucket_valid.shape[1])}
+
+    def abstract_state(self, *, n: int, md: int = 16, d: int = 16,
+                       k: int = 256, **knobs) -> RetrieverState:
+        n_list = knobs.get("n_list", index_mod.IVFConfig.n_list)
+        n_probe = knobs.get("n_probe", index_mod.IVFConfig.n_probe)
+        # same padded-dense capacity rule as build_ivf (2x mean load)
+        cap = knobs.get("bucket_cap", int(max(8, 2 * -(-n // n_list))))
+        sds, cdt = jax.ShapeDtypeStruct, code_dtype(k)
+        ix = index_mod.IVFIndex(
+            routing_centroids=sds((n_list, d), jnp.float32),
+            bucket_codes=sds((n_list, cap, md), cdt),
+            bucket_mask=sds((n_list, cap, md), jnp.bool_),
+            bucket_valid=sds((n_list, cap), jnp.bool_),
+            bucket_doc_ids=sds((n_list, cap), jnp.int32),
+            codebook=sds((k, d), jnp.float32))
+        return RetrieverState(
+            codebook=sds((k, d), jnp.float32),
+            backend_state=IVFState(ix, n_probe),
+            rerank_codes=sds((n, md), cdt),
+            rerank_mask=sds((n, md), jnp.bool_))
 
     def _state_aux(self, state: RetrieverState):
         return state.backend_state.n_probe

@@ -68,6 +68,12 @@ class ServeConfig:
     # device at once. 2 = stage n+1 while n computes (the default); 1
     # disables the overlap.
     max_inflight: int = 2
+    # Wrap search_fn in a repro.analysis RecompileSentry: every call's
+    # (B, Mq, dtypes) signature is recorded, batches whose B is not a
+    # ladder rung raise RecompileGuardError instead of silently minting a
+    # new compiled shape, and `recompile_report()` exposes the signature
+    # set for the exact-rung-set assertion in tests/soaks.
+    guard_recompiles: bool = False
 
     def resolved_ladder(self) -> Tuple[int, ...]:
         if self.ladder is None:
@@ -107,6 +113,19 @@ class AsyncRetrievalServer:
         self.search_fn = search_fn
         self.cfg = cfg
         self.ladder = cfg.resolved_ladder()
+        self.recompile_sentry = None
+        if cfg.guard_recompiles:
+            from repro.analysis.recompile import RecompileSentry
+            rungs = set(self.ladder)
+
+            def serve_signature(q, qm, qs):
+                return (int(q.shape[0]), int(q.shape[1]), str(q.dtype),
+                        str(qm.dtype), str(qs.dtype))
+
+            self.recompile_sentry = RecompileSentry(
+                search_fn, name="serve.search_fn", key_fn=serve_signature,
+                allowed=lambda key: key[0] in rungs)
+            self.search_fn = self.recompile_sentry
         self._queue: Optional[asyncio.Queue] = None
         self._dispatcher: Optional[asyncio.Task] = None
         self._inflight: Optional[asyncio.Semaphore] = None
@@ -353,6 +372,13 @@ class AsyncRetrievalServer:
             "rungs": rungs,
         }
 
+    def recompile_report(self) -> Optional[Dict[str, Any]]:
+        """The recompile sentry's signature report (None when the guard
+        is off — see ServeConfig.guard_recompiles)."""
+        if self.recompile_sentry is None:
+            return None
+        return self.recompile_sentry.report()
+
     def reset_stats(self) -> None:
         """Drop recorded latencies and the serving window (e.g. after a
         warmup/compile request, which would otherwise skew qps)."""
@@ -458,6 +484,13 @@ class RetrievalServer:
 
     def stats(self) -> Dict[str, Any]:
         return self._async.stats()
+
+    @property
+    def recompile_sentry(self):
+        return self._async.recompile_sentry
+
+    def recompile_report(self) -> Optional[Dict[str, Any]]:
+        return self._async.recompile_report()
 
     def reset_stats(self) -> None:
         self._async.reset_stats()

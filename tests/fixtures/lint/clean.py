@@ -1,0 +1,13 @@
+"""Clean fixture: no findings from any fallback or JAX rule."""
+import jax
+import jax.numpy as jnp
+
+
+def fresh_noise():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    return jax.random.normal(k1, (4,)) + jax.random.normal(k2, (4,))
+
+
+@jax.jit
+def on_device_mean(x):
+    return jnp.mean(x)

@@ -1,0 +1,9 @@
+"""Planted JAX01 fixture: key reused without a split (never executed)."""
+import jax
+
+
+def correlated_noise():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (4,))
+    b = jax.random.normal(key, (4,))
+    return a + b

@@ -1,0 +1,7 @@
+"""Planted JAX02 fixture: host sync inside a jitted body (never run)."""
+import jax
+
+
+@jax.jit
+def leaky_mean(x):
+    return x.mean().item()

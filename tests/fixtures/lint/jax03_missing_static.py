@@ -1,0 +1,7 @@
+"""Planted JAX03 fixture: undeclared known-static param (never run)."""
+import jax
+
+
+@jax.jit
+def head(q, k):
+    return q[:k]

@@ -1,0 +1,10 @@
+"""Planted JAX04 fixture: bare lax.top_k off the scan path (never run)."""
+from jax import lax
+
+
+def best(scores):
+    return lax.top_k(scores, 5)
+
+
+def best_guarded(scores):
+    return lax.top_k(scores, 1)  # noqa: JAX04 - k=1 <= any input length

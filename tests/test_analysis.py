@@ -1,0 +1,216 @@
+"""Tests for the `repro.analysis` static-analysis subsystem.
+
+Covers the three engines tools/jaxlint.py drives (docs/design.md §8):
+
+  * AST lints — planted-violation fixtures in tests/fixtures/lint assert
+    the JAX01-JAX04 rules fire at the exact (file, line, code), and the
+    ruff-fallback rules (E9/F401/F541/F811) + noqa semantics are checked
+    on inline sources.
+  * Jaxpr budget manifests — the registry is sane, a clean manifest
+    analyzes clean, and the acceptance case: deliberately unblocking the
+    flat scan (the O(N*Mq*Md) ADC gather) is rejected.
+  * Recompile sentry — signature counting, the allowed/expected gates,
+    cache-consistency cross-check, and the serving integration
+    (`ServeConfig.guard_recompiles`).
+"""
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (BudgetManifest, RecompileGuardError,
+                            RecompileSentry, analyze_manifest, check_source,
+                            get_manifest, ladder_signatures, manifests,
+                            run_paths)
+from repro.analysis.astchecks import JAX_RULES
+from repro.analysis.lintcore import RUFF_FALLBACK_RULES
+
+FIXTURES = Path(__file__).parent / "fixtures" / "lint"
+
+
+# --- AST lints: planted fixtures ------------------------------------------
+
+def test_planted_fixtures_fire_at_exact_locations():
+    findings = run_paths([FIXTURES], tuple(RUFF_FALLBACK_RULES) + JAX_RULES)
+    got = {(Path(f.path).name, f.line, f.code) for f in findings}
+    assert got == {
+        ("jax01_key_reuse.py", 8, "JAX01"),
+        ("jax02_host_sync.py", 7, "JAX02"),
+        ("jax03_missing_static.py", 6, "JAX03"),
+        ("jax04_bare_topk.py", 6, "JAX04"),
+    }, sorted(map(str, findings))
+
+
+def test_noqa_suppressed_fixture_line_stays_silent():
+    # jax04_bare_topk.py line 10 carries `# noqa: JAX04` — the suppressed
+    # call must not appear even though line 6's identical call does
+    findings = run_paths([FIXTURES / "jax04_bare_topk.py"], JAX_RULES)
+    assert [f.line for f in findings] == [6]
+
+
+# --- AST lints: fallback rules + noqa semantics ---------------------------
+
+def test_f401_resolves_all_from_ast_not_text():
+    exported = 'import os\n\n__all__ = ["os"]\n'
+    assert check_source("m.py", exported, RUFF_FALLBACK_RULES) == []
+    # merely *mentioning* __all__ in a string must not exempt the import
+    textual = 'import os\n\nX = "see __all__ for exports"\n'
+    findings = check_source("m.py", textual, RUFF_FALLBACK_RULES)
+    assert [(f.line, f.code) for f in findings] == [(1, "F401")]
+
+
+def test_noqa_is_code_specific():
+    rules = RUFF_FALLBACK_RULES
+    assert check_source("m.py", "import os  # noqa: F401\n", rules) == []
+    assert check_source("m.py", "import os  # noqa\n", rules) == []
+    # a noqa naming a *different* code does not suppress F401
+    findings = check_source("m.py", "import os  # noqa: F811\n", rules)
+    assert [(f.line, f.code) for f in findings] == [(1, "F401")]
+
+
+def test_fallback_rules_e9_f541_f811():
+    rules = RUFF_FALLBACK_RULES
+    assert [f.code for f in check_source("m.py", "def broken(:\n", rules)] \
+        == ["E9"]
+    findings = check_source("m.py", 'x = f"static"\n', rules)
+    assert [(f.line, f.code) for f in findings] == [(1, "F541")]
+    dup = "def a():\n    pass\n\n\ndef a():\n    pass\n"
+    findings = check_source("m.py", dup, rules)
+    assert [(f.line, f.code) for f in findings] == [(5, "F811")]
+
+
+# --- jaxpr budget manifests -----------------------------------------------
+
+def test_manifest_registry_is_sorted_and_complete():
+    names = [m.name for m in manifests()]
+    assert names == sorted(names)
+    assert {"search_flat", "search_float_flat", "search_hamming",
+            "search_ivf", "search_hnsw", "retriever_rerank"} <= set(names)
+    assert len(names) >= 10
+    with pytest.raises(KeyError):
+        get_manifest("no_such_entry_point")
+
+
+def test_hamming_manifest_clean_with_int32_contract():
+    m = get_manifest("scan_hamming")
+    assert m.out_dtypes == (jnp.int32, jnp.int32)
+    assert analyze_manifest(m) == []
+
+
+def test_unblocked_scan_is_rejected():
+    """Acceptance: swap the blocked scan for the naive one-shot ADC path
+    and the analyzer must flag the O(N) blowup (the (B, Mq, N, Md) gather
+    is ~2 KB/doc against a 16 B/doc allowance)."""
+    from repro.core import late_interaction as li
+
+    def trace(n):
+        sds = jax.ShapeDtypeStruct
+        qe = sds((8, 8, 16), jnp.float32)
+        qm = sds((8, 8), jnp.bool_)
+        codes = sds((n, 16), jnp.uint8)
+        mask = sds((n, 16), jnp.bool_)
+        cb = sds((256, 16), jnp.float32)
+
+        def fn(qe, qm, codes, mask, cb):
+            scores = li.quantized_maxsim(qe, qm, codes, mask, cb)
+            return jax.lax.top_k(scores, 16)  # noqa: JAX04 - fixture trace
+        return fn, (qe, qm, codes, mask, cb)
+
+    m = BudgetManifest(name="unblocked_flat", trace=trace,
+                       out_dtypes=None, n=1 << 14, n_alt=1 << 13)
+    violations = analyze_manifest(m)
+    assert violations, "the unblocked gather must not pass the budget"
+    assert any(v.kind == "n_scaling" for v in violations)
+    assert all(v.manifest == "unblocked_flat" for v in violations)
+
+
+# --- recompile sentry ------------------------------------------------------
+
+def test_sentry_counts_distinct_signatures():
+    sentry = RecompileSentry(lambda x: x, name="t",
+                             key_fn=lambda x: tuple(x.shape))
+    a = jnp.zeros((2, 3))
+    sentry(a)
+    sentry(a)                      # repeat call mints nothing
+    assert sentry.calls == 2 and len(sentry.signatures) == 1
+    sentry(jnp.zeros((4, 3)))
+    sentry.assert_signatures({(2, 3), (4, 3)})
+    with pytest.raises(RecompileGuardError, match="mismatch"):
+        sentry.assert_signatures({(2, 3)})
+
+
+def test_sentry_allowed_gate_rejects_before_recording():
+    sentry = RecompileSentry(lambda x: x, name="t",
+                             key_fn=lambda x: tuple(x.shape),
+                             allowed=lambda k: k[0] in (1, 2))
+    sentry(jnp.zeros((2, 3)))
+    with pytest.raises(RecompileGuardError, match="rejected"):
+        sentry(jnp.zeros((5, 3)))
+    # the rejected call never reached the jit cache: not recorded either
+    assert set(sentry.signatures) == {(2, 3)}
+
+
+def test_sentry_expected_and_max_signatures():
+    sentry = RecompileSentry(lambda x: x, key_fn=lambda x: tuple(x.shape),
+                             expected={(1,), (2,)})
+    sentry(jnp.zeros((1,)))
+    with pytest.raises(RecompileGuardError, match="unexpected signature"):
+        sentry(jnp.zeros((3,)))
+
+    capped = RecompileSentry(lambda x: x, key_fn=lambda x: tuple(x.shape),
+                             max_signatures=2)
+    capped(jnp.zeros((1,)))
+    capped(jnp.zeros((2,)))
+    with pytest.raises(RecompileGuardError, match="max_signatures"):
+        capped(jnp.zeros((3,)))
+
+
+def test_sentry_cache_consistency_catches_key_leak():
+    @jax.jit
+    def f(x):
+        return x + 1
+
+    # keyed on shape only: a dtype flip splits the jit cache underneath
+    sentry = RecompileSentry(f, key_fn=lambda x: tuple(x.shape))
+    sentry(jnp.ones((2,), jnp.float32))
+    assert sentry.check_cache_consistent() == 1
+    sentry(jnp.ones((2,), jnp.int32))
+    with pytest.raises(RecompileGuardError, match="splitting the cache"):
+        sentry.check_cache_consistent()
+
+
+def test_ladder_signatures():
+    assert ladder_signatures((1, 2, 4), 8) == {(1, 8), (2, 8), (4, 8)}
+    assert ladder_signatures((1, 2), (8, 16)) == {
+        (1, 8), (1, 16), (2, 8), (2, 16)}
+
+
+def test_server_guard_recompiles_closed_rung_set():
+    from repro.serving.server import RetrievalServer, ServeConfig
+
+    @jax.jit
+    def search_stub(q, qm, qs):
+        b = q.shape[0]
+        return jnp.zeros((b, 4), jnp.float32), jnp.zeros((b, 4), jnp.int32)
+
+    cfg = ServeConfig(max_batch=4, top_k=4, guard_recompiles=True)
+    server = RetrievalServer(search_stub, cfg)
+    try:
+        server.warm_shapes(np.zeros((8, 16), np.float32),
+                           np.ones((8,), bool),
+                           np.zeros((8,), np.float32))
+        report = server.recompile_report()
+        assert report["n_signatures"] == len(server.ladder)
+        rung_bs = {sig[0] for sig in server.recompile_sentry.signatures}
+        assert rung_bs == set(server.ladder)
+        # an off-ladder batch raises instead of minting a new compile
+        with pytest.raises(RecompileGuardError, match="rejected"):
+            server.recompile_sentry(
+                jnp.zeros((3, 8, 16), jnp.float32),
+                jnp.ones((3, 8), bool),
+                jnp.zeros((3, 8), jnp.float32))
+        server.recompile_sentry.check_cache_consistent()
+    finally:
+        server.close()

@@ -338,60 +338,24 @@ def test_search_hamming_k_exceeds_corpus():
 
 # --- memory regression: the scan must never build O(N*Mq) ------------------
 
-def _iter_jaxprs(jaxpr):
-    """Yield a jaxpr and every jaxpr nested in its eqn params."""
-    yield jaxpr
-    for eqn in jaxpr.eqns:
-        for p in eqn.params.values():
-            vals = p if isinstance(p, (tuple, list)) else (p,)
-            for v in vals:
-                inner = getattr(v, "jaxpr", None)
-                if hasattr(v, "eqns"):            # bare Jaxpr
-                    yield from _iter_jaxprs(v)
-                elif inner is not None and hasattr(inner, "eqns"):
-                    yield from _iter_jaxprs(inner)  # ClosedJaxpr
-
-
-def _max_intermediate_bytes(closed) -> int:
-    worst = 0
-    for j in _iter_jaxprs(closed.jaxpr):
-        for eqn in j.eqns:
-            for v in eqn.outvars:
-                aval = v.aval
-                if getattr(aval, "shape", None) is not None:
-                    n = int(np.prod(aval.shape, dtype=np.int64))
-                    worst = max(worst, n * aval.dtype.itemsize)
-    return worst
-
-
 def test_streaming_scan_never_materializes_corpus_scores():
     """Acceptance: at N = 2**20 the old unblocked path's similarity
     tensor alone would be B*Mq*N*Md*4 = 2.1 GB; the streaming scan's
-    largest live intermediate must stay under a 64 MB budget (jaxpr
-    shape inspection), and a large-N CPU run must actually complete."""
-    budget = 64 * 2 ** 20
-    n, b, mq, md, d, k_cb = 1 << 20, 4, 8, 16, 16, 16
-    old_sim_bytes = b * mq * n * md * 4
-    assert old_sim_bytes > 30 * budget
+    budget is gated by the `search_flat` manifest (jaxpr shape
+    inspection in repro.analysis), and a large-N CPU run must actually
+    complete."""
+    from repro.analysis import analyze_manifest, get_manifest
 
-    scan_cfg = scan_mod.ScanConfig(block_docs=256, impl="jnp")
-    ix_shape = index_mod.FlatIndex(
-        codes=jax.ShapeDtypeStruct((n, md), jnp.uint8),
-        mask=jax.ShapeDtypeStruct((n, md), jnp.bool_),
-        codebook=jax.ShapeDtypeStruct((k_cb, d), jnp.float32),
-        doc_ids=jax.ShapeDtypeStruct((n,), jnp.int32))
-    closed = jax.make_jaxpr(
-        lambda ix, q, qm: index_mod.search_flat(ix, q, qm, k=10,
-                                                scan=scan_cfg))(
-        ix_shape, jax.ShapeDtypeStruct((b, mq, d), jnp.float32),
-        jax.ShapeDtypeStruct((b, mq), jnp.bool_))
-    worst = _max_intermediate_bytes(closed)
-    assert worst < budget, f"live intermediate {worst/2**20:.1f} MB"
+    m = get_manifest("search_flat")
+    old_sim_bytes = 8 * 8 * m.n * 16 * 4
+    assert old_sim_bytes > 30 * m.max_block_bytes
+    violations = analyze_manifest(m)
+    assert violations == [], [str(v) for v in violations]
 
     # live run at an N where the unblocked similarity tensor (~128 MB at
     # these shapes x ~4 batch copies in flight) would dwarf the blocked
     # path's footprint; plant a known best doc and retrieve it
-    n_live = 1 << 17
+    n_live, md, d, k_cb = 1 << 17, 16, 16, 16
     ks = jax.random.split(jax.random.PRNGKey(8), 2)
     cb = jax.random.normal(ks[0], (k_cb, d))
     cb = cb.at[3].mul(10.0)                     # self-dot dominates

@@ -3,101 +3,41 @@
   python tools/astlint.py [paths...]
 
 The CI `lint` job runs ruff (pip-installed there); sandboxes without
-network can't, so this implements the highest-signal subset on the
-stdlib AST: syntax errors (E9), unused imports (F401), duplicate
-top-level definitions (F811), and f-strings without placeholders (F541).
-A `# noqa` comment on the flagged line suppresses it, same as ruff.
-Exit code 1 if any finding.
+network can't, so this gates the highest-signal subset on the stdlib AST:
+syntax errors (E9), unused imports (F401), duplicate top-level
+definitions (F811), and f-strings without placeholders (F541).
+
+This is a thin shim over the shared framework in
+`repro.analysis.lintcore` — the same Rule objects the `analysis` CI job
+drives through tools/jaxlint.py, so the fallback and the framework
+cannot drift. `# noqa` suppression follows ruff semantics: bare noqa
+kills every code on the line, `# noqa: F401` only the named ones, and
+F401 resolves re-exports from the parsed `__all__` list (not a textual
+scan of the source). Exit code 1 if any finding.
 """
+
 from __future__ import annotations
 
-import ast
 import sys
 from pathlib import Path
 
-DEFAULT_PATHS = ["src", "tests", "benchmarks", "examples", "tools"]
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-
-def _noqa_lines(source: str) -> set:
-    return {i + 1 for i, ln in enumerate(source.splitlines())
-            if "# noqa" in ln}
-
-
-def _used_names(tree: ast.AST) -> set:
-    used = set()
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Name):
-            used.add(node.id)
-        elif isinstance(node, ast.Attribute):
-            # record the root of dotted access: np.zeros -> np
-            n = node
-            while isinstance(n, ast.Attribute):
-                n = n.value
-            if isinstance(n, ast.Name):
-                used.add(n.id)
-    return used
-
-
-def check_file(path: Path) -> list:
-    source = path.read_text()
-    findings = []
-    try:
-        tree = ast.parse(source, filename=str(path))
-    except SyntaxError as e:
-        return [(path, e.lineno or 0, "E9", f"syntax error: {e.msg}")]
-    noqa = _noqa_lines(source)
-    used = _used_names(tree)
-    has_all = "__all__" in source
-    # format specs (f"{x:8.3f}") parse as nested JoinedStr nodes with no
-    # FormattedValue of their own — they are not F541
-    spec_ids = {id(node.format_spec) for node in ast.walk(tree)
-                if isinstance(node, ast.FormattedValue) and node.format_spec}
-
-    for node in ast.walk(tree):
-        if isinstance(node, (ast.Import, ast.ImportFrom)):
-            if node.lineno in noqa:
-                continue
-            if isinstance(node, ast.ImportFrom) and \
-                    node.module == "__future__":
-                continue
-            for alias in node.names:
-                name = (alias.asname or alias.name).split(".")[0]
-                if alias.name == "*" or has_all:
-                    continue
-                if name not in used:
-                    findings.append(
-                        (path, node.lineno, "F401",
-                         f"unused import: {alias.asname or alias.name}"))
-        elif isinstance(node, ast.JoinedStr) and id(node) not in spec_ids:
-            if node.lineno not in noqa and not any(
-                    isinstance(v, ast.FormattedValue) for v in node.values):
-                findings.append((path, node.lineno, "F541",
-                                 "f-string without placeholders"))
-
-    seen = {}
-    for node in tree.body:
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
-                             ast.ClassDef)):
-            if node.name in seen and node.lineno not in noqa:
-                findings.append(
-                    (path, node.lineno, "F811",
-                     f"redefinition of {node.name!r} "
-                     f"(first at line {seen[node.name]})"))
-            seen[node.name] = node.lineno
-    return findings
+from repro.analysis.lintcore import (  # noqa: E402
+    DEFAULT_PATHS,
+    RUFF_FALLBACK_RULES,
+    iter_py_files,
+    run_paths,
+)
 
 
 def main(argv) -> int:
-    roots = [Path(p) for p in (argv or DEFAULT_PATHS)]
-    files = []
-    for r in roots:
-        files.extend(sorted(r.rglob("*.py")) if r.is_dir() else [r])
-    findings = []
-    for f in files:
-        findings.extend(check_file(f))
-    for path, line, code, msg in findings:
-        print(f"{path}:{line}: {code} {msg}")
-    print(f"astlint: {len(files)} files, {len(findings)} finding(s)")
+    paths = list(argv) or list(DEFAULT_PATHS)
+    findings = run_paths(paths, RUFF_FALLBACK_RULES)
+    for f in findings:
+        print(f)
+    n_files = len(iter_py_files(paths))
+    print(f"astlint: {n_files} files, {len(findings)} finding(s)")
     return 1 if findings else 0
 
 

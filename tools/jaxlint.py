@@ -1,0 +1,153 @@
+"""Static-analysis driver for the repro.analysis subsystem.
+
+  python tools/jaxlint.py [--ast] [--jaxpr] [--recompile]
+                          [--json OUT.json] [paths...]
+
+Engines (all run when no engine flag is given):
+
+  --ast        AST lints: the ruff-fallback rules (E9/F401/F811/F541)
+               plus the JAX-aware rules JAX01-JAX04 from
+               repro.analysis.astchecks. Paths default to src,
+               benchmarks and examples (tests plant deliberate
+               violations as analyzer fixtures, so they are linted by
+               tools/astlint.py's rule subset instead).
+  --jaxpr      Memory-budget manifests: trace every registered entry
+               point (all five backend search_* paths, the facade
+               rerank, the scan engine itself) at symbolic corpus size
+               and enforce the per-entry budgets + dtype contracts from
+               repro.analysis.manifests.
+  --recompile  Serving-ladder compile contract: warm a jitted search
+               stand-in over the default power-of-two ladder under a
+               RecompileSentry and assert it compiles exactly the
+               declared rung set, with a consistent jit cache.
+
+Network-free and CPU-only; --json writes the machine-readable findings
+(the CI `analysis` job uploads it as an artifact). Exit code 1 on any
+finding or violation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+AST_DEFAULT_PATHS = ("src", "benchmarks", "examples")
+
+
+def run_ast(paths) -> list:
+    from repro.analysis.astchecks import JAX_RULES
+    from repro.analysis.lintcore import RUFF_FALLBACK_RULES, run_paths
+
+    return run_paths(paths, tuple(RUFF_FALLBACK_RULES) + tuple(JAX_RULES))
+
+
+def run_jaxpr() -> list:
+    from repro.analysis.jaxpr_budget import report
+    from repro.analysis.manifests import manifests
+
+    return [report(m) for m in manifests()]
+
+
+def run_recompile() -> dict:
+    """Warm the default serving ladder under a sentry; gate the rung set."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.recompile import (
+        RecompileGuardError,
+        RecompileSentry,
+        ladder_signatures,
+    )
+    from repro.serving.server import ServeConfig
+
+    ladder = ServeConfig().resolved_ladder()
+    mq = 8
+
+    @jax.jit
+    def search_stub(q, qm, qs):
+        return jnp.sum(q, axis=(1, 2)), jnp.argsort(qm.sum(axis=1))
+
+    def key_fn(q, qm, qs):
+        return (int(q.shape[0]), int(q.shape[1]))
+
+    sentry = RecompileSentry(search_stub, name="ladder", key_fn=key_fn)
+    for b in ladder:
+        for _ in range(2):  # repeat calls must not mint new signatures
+            sentry(
+                jnp.zeros((b, mq, 4), jnp.float32),
+                jnp.ones((b, mq), bool),
+                jnp.zeros((b, mq), jnp.float32),
+            )
+    try:
+        sentry.assert_signatures(ladder_signatures(ladder, mq))
+        sentry.check_cache_consistent()
+        error = None
+    except RecompileGuardError as e:
+        error = str(e)
+    return {
+        "ladder": list(ladder),
+        "report": sentry.report(),
+        "ok": error is None,
+        "error": error,
+    }
+
+
+def main(argv) -> int:
+    ap = argparse.ArgumentParser(prog="jaxlint", description=__doc__)
+    ap.add_argument("--ast", action="store_true")
+    ap.add_argument("--jaxpr", action="store_true")
+    ap.add_argument("--recompile", action="store_true")
+    ap.add_argument("--json", metavar="OUT", default=None)
+    ap.add_argument("paths", nargs="*", help="--ast paths")
+    args = ap.parse_args(argv)
+    run_all = not (args.ast or args.jaxpr or args.recompile)
+
+    out: dict = {}
+    failed = False
+
+    if args.ast or run_all:
+        findings = run_ast(args.paths or list(AST_DEFAULT_PATHS))
+        for f in findings:
+            print(f)
+        print(f"jaxlint --ast: {len(findings)} finding(s)")
+        out["ast"] = [f.to_json() for f in findings]
+        failed |= bool(findings)
+
+    if args.jaxpr or run_all:
+        reports = run_jaxpr()
+        bad = [r for r in reports if not r["ok"]]
+        for r in bad:
+            for v in r["violations"]:
+                print(f"[{v['manifest']}] {v['kind']}: {v['detail']}")
+        print(
+            f"jaxlint --jaxpr: {len(reports)} manifest(s), "
+            f"{len(bad)} violating"
+        )
+        out["jaxpr"] = reports
+        failed |= bool(bad)
+
+    if args.recompile or run_all:
+        rec = run_recompile()
+        if not rec["ok"]:
+            print(f"jaxlint --recompile: {rec['error']}")
+        print(
+            f"jaxlint --recompile: ladder {rec['ladder']}, "
+            f"{rec['report']['n_signatures']} signature(s), "
+            f"ok={rec['ok']}"
+        )
+        out["recompile"] = rec
+        failed |= not rec["ok"]
+
+    out["ok"] = not failed
+    if args.json:
+        Path(args.json).write_text(json.dumps(out, indent=2, default=str))
+        print(f"jaxlint: wrote {args.json}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
