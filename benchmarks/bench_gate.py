@@ -27,8 +27,11 @@ import sys
 # regression when the normalised value rises above baseline*(1+tol);
 # "higher" = regression when it falls below baseline*(1-tol); "floor" =
 # hard quality floor — the current value must be >= the PINNED constant
-# below, with NO tolerance (quality gets no -20% forgiveness). The floor
-# is pinned here, not read from BENCH_baseline.json, so the routine
+# below, with NO tolerance (quality gets no -20% forgiveness); "ceiling"
+# = the current value must be <= the pinned constant, no tolerance (the
+# budget-contract dual of "floor" — e.g. the cascade's float stage may
+# never touch more than 5% of the corpus). Floors/ceilings are pinned
+# here, not read from BENCH_baseline.json, so the routine
 # baseline-refresh workflow (copying a smoke run's measured JSON) can
 # never silently tighten it; the baseline field stays informational. 0.70
 # mirrors the tier-1 quantized-flat floor, ~2.6 quanta (1/32 each) below
@@ -57,6 +60,19 @@ GATED = [
     # are reported headline numbers; treat them as one signal.
     (("scan", "flat_scan_ms_per_query"), "lower", True, None),
     (("scan", "flat_scan_docs_per_sec"), "higher", True, None),
+    # compression cascade (retrieval_quality.cascade_metrics — hamming
+    # prefilter -> ADC top-p1 -> float rerank of top-p2). The acceptance
+    # criterion is the RATIO: the funnel's ground-truth recall@10 must
+    # reach 0.95x the exhaustive flat ADC oracle on the same codebook
+    # (measured ~1.3x — the float rerank corrects quantization noise).
+    # cascade_recall10 is additionally gated against the baseline value
+    # (tolerance band) to catch absolute regressions the ratio hides
+    # when flat moves too; the float-touched fraction is a pinned 5%
+    # budget ceiling — the funnel's defining contract.
+    (("cascade", "cascade_recall10"), "higher", False, None),
+    (("cascade", "cascade_recall10_vs_flat"), "floor", False, 0.95),
+    (("cascade", "cascade_ms_per_query"), "lower", True, None),
+    (("cascade", "cascade_float_frac"), "ceiling", False, 0.05),
 ]
 
 
@@ -79,7 +95,7 @@ def compare(current: dict, baseline: dict, tolerance: float):
     for path, direction, normalise, floor in GATED:
         name = ".".join(path)
         cur, base = _get(current, path), _get(baseline, path)
-        if direction == "floor":
+        if direction in ("floor", "ceiling"):
             base = floor              # pinned, never from the baseline file
         if base is None:
             lines.append(f"SKIP {name}: not in baseline")
@@ -105,6 +121,10 @@ def compare(current: dict, baseline: dict, tolerance: float):
             ok = cur_n >= base_n
             delta = (base_n - cur_n) / base_n if base_n else 0.0
             tol_s = "pinned hard floor, no tolerance"
+        elif direction == "ceiling":
+            ok = cur_n <= base_n
+            delta = (cur_n - base_n) / base_n if base_n else 0.0
+            tol_s = "pinned hard ceiling, no tolerance"
         else:
             ok = cur_n >= base_n * (1.0 - tolerance)
             delta = (base_n - cur_n) / base_n if base_n else 0.0

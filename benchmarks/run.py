@@ -77,6 +77,13 @@ def smoke(json_path=None) -> int:
           f"(margin {ann['hnsw_minus_ivf_recall10']:+.3f} at "
           f"{ann['scanned_frac']:.0%} scanned)  "
           f"hnsw {ann['hnsw_ms_per_query']:.3f} ms/q")
+    print("== smoke: compression cascade (hamming -> ADC -> float) ==")
+    casc = retrieval_quality.cascade_metrics()
+    print(f"  recall@10={casc['cascade_recall10']:.3f} "
+          f"(flat oracle {casc['flat_recall10']:.3f}, "
+          f"ratio {casc['cascade_recall10_vs_flat']:.2f}x)  "
+          f"float stage touches {casc['cascade_float_frac']:.1%}  "
+          f"{casc['cascade_ms_per_query']:.3f} ms/q")
     print("== smoke: streaming flat scan (wired search path) ==")
     scan = kernel_bench.flat_scan_metrics()
     print("== smoke: storage footprint ==")
@@ -118,6 +125,7 @@ def smoke(json_path=None) -> int:
                     **cb},
         "ann": ann,
         "scan": scan,
+        "cascade": casc,
     }
     if json_path:
         with open(json_path, "w") as f:

@@ -219,6 +219,14 @@ for _m in (
         notes="The beam's visited bitmask is (B, N) bool = 8 B/doc at "
               "B=8; everything else is O(ef_search)."),
     BudgetManifest(
+        name="search_cascade",
+        trace=_backend_trace("cascade", p1=1024, p2=64),
+        notes="Staged funnel: the hamming prefilter is the only O(N) "
+              "pass (blocked, like search_hamming); the ADC and float "
+              "stages gather per-query (B, p1)/(B, p2) pools — "
+              "O(budget), never a full-corpus gather. Float scores out "
+              "(exact rerank)."),
+    BudgetManifest(
         name="retriever_rerank",
         trace=_rerank_trace,
         notes="Candidate gather from the unpruned (N, Md) code corpus: "

@@ -86,6 +86,39 @@ def search_flat(index: FlatIndex, q: Array, q_mask: Array, *, k: int,
         doc_ids=index.doc_ids, scan=scan)
 
 
+def _gather_candidates(candidate_ids: Array, doc_ids: Array,
+                       *leaves: Array) -> Tuple[Array, Array, Tuple[Array, ...]]:
+    """Gather per-query candidate rows from a shared corpus layout.
+
+    candidate_ids (B, P) are *positions* into the index's doc axis; -1
+    marks empty pool slots (the sentinel contract). Returns
+    (global_ids (B, P), valid (B, P), gathered leaves each (B, P, ...)).
+    Per-query gather cost is O(B * P * row), never O(N).
+    """
+    valid = candidate_ids >= 0
+    safe = jnp.maximum(candidate_ids, 0)
+    ids = jnp.where(valid, doc_ids[safe], -1).astype(jnp.int32)
+    return ids, valid, tuple(leaf[safe] for leaf in leaves)
+
+
+@partial(jax.jit, static_argnames=("k", "scan"))
+def search_flat_candidates(index: FlatIndex, q: Array, q_mask: Array,
+                           candidate_ids: Array, *, k: int,
+                           scan: Optional[scan_mod.ScanConfig] = None
+                           ) -> Tuple[Array, Array]:
+    """ADC MaxSim over a (B, P) candidate pool — the cascade's mid stage.
+
+    Scores only the listed positions via the streaming engine's
+    per-query layout; rows with candidate_id -1 (and k > P padding)
+    carry the -1/sentinel contract in the output.
+    """
+    ids, valid, (codes, mask) = _gather_candidates(
+        candidate_ids, index.doc_ids, index.codes, index.mask)
+    return scan_mod.quantized_maxsim_topk(
+        q, q_mask, codes, mask, index.codebook, k=k,
+        doc_ids=ids, valid=valid, scan=scan)
+
+
 class FloatFlatIndex(NamedTuple):
     """Uncompressed baseline (ColPali-Full)."""
     embeddings: Array  # (N, Md, D)
@@ -109,6 +142,19 @@ def search_float_flat(index: FloatFlatIndex, q: Array, q_mask: Array, *,
     return scan_mod.maxsim_topk(
         q, q_mask, index.embeddings, index.mask, k=k,
         doc_ids=index.doc_ids, scan=scan)
+
+
+@partial(jax.jit, static_argnames=("k", "scan"))
+def search_float_flat_candidates(index: FloatFlatIndex, q: Array,
+                                 q_mask: Array, candidate_ids: Array, *,
+                                 k: int,
+                                 scan: Optional[scan_mod.ScanConfig] = None
+                                 ) -> Tuple[Array, Array]:
+    """Float MaxSim over a (B, P) candidate pool — the cascade's rerank."""
+    ids, valid, (emb, mask) = _gather_candidates(
+        candidate_ids, index.doc_ids, index.embeddings, index.mask)
+    return scan_mod.maxsim_topk(
+        q, q_mask, emb, mask, k=k, doc_ids=ids, valid=valid, scan=scan)
 
 
 # ---------------------------------------------------------------------------
@@ -266,3 +312,17 @@ def search_hamming(index: HammingIndex, q_codes: Array, q_mask: Array, *,
     return scan_mod.hamming_maxsim_topk(
         q_codes, q_mask, index.codes, index.mask, bits=bits, k=k,
         doc_ids=index.doc_ids, scan=scan)
+
+
+@partial(jax.jit, static_argnames=("k", "bits", "scan"))
+def search_hamming_candidates(index: HammingIndex, q_codes: Array,
+                              q_mask: Array, candidate_ids: Array, *,
+                              bits: int, k: int,
+                              scan: Optional[scan_mod.ScanConfig] = None
+                              ) -> Tuple[Array, Array]:
+    """Popcount MaxSim over a (B, P) candidate pool (per-query layout)."""
+    ids, valid, (codes, mask) = _gather_candidates(
+        candidate_ids, index.doc_ids, index.codes, index.mask)
+    return scan_mod.hamming_maxsim_topk(
+        q_codes, q_mask, codes, mask, bits=bits, k=k,
+        doc_ids=ids, valid=valid, scan=scan)

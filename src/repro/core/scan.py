@@ -257,29 +257,52 @@ def maxsim_topk(q: Array, q_mask: Array, docs: Array, d_mask: Array, *,
                 k: int, doc_ids: Optional[Array] = None,
                 valid: Optional[Array] = None,
                 scan: Optional[ScanConfig] = None) -> Tuple[Array, Array]:
-    """Streaming float MaxSim top-k over a shared (N, Md, D) corpus."""
+    """Streaming float MaxSim top-k.
+
+    docs/d_mask are either a shared (N, Md, D) corpus or (B, P, Md, D)
+    per-query candidate pools (the cascade's float rerank stage) — same
+    two layouts as `quantized_maxsim_topk`.
+    """
     scan = scan if scan is not None else DEFAULT
     mode = resolve_impl(scan.impl)
-    b, n = q.shape[0], docs.shape[0]
-    doc_ids, valid = _prep(n, doc_ids, valid, False, b)
+    per_query = docs.ndim == 4
+    b = q.shape[0]
+    n = docs.shape[1] if per_query else docs.shape[0]
+    doc_ids, valid = _prep(n, doc_ids, valid, per_query, b)
 
     if mode == "jnp":
-        def score_block(d, m):
-            return li.maxsim(q, q_mask, d, m)
+        if per_query:
+            def score_block(d, m):
+                return jax.vmap(
+                    lambda q1, qm1, d1, m1: li.maxsim(q1[None], qm1[None],
+                                                      d1, m1)[0]
+                )(q, q_mask, d, m)
+        else:
+            def score_block(d, m):
+                return li.maxsim(q, q_mask, d, m)
     else:
         interpret = mode == "interpret"
         qm_f = q_mask.astype(jnp.float32)
 
-        def score_block(d, m):
-            tile = _kernel_tile(d.shape[0], 16)
-            return maxsim_k.maxsim_pallas(q, qm_f, d,
-                                          m.astype(jnp.float32),
-                                          block_docs=tile,
-                                          interpret=interpret)
+        if per_query:
+            def score_block(d, m):
+                def one(q1, qm1, d1, m1):
+                    tile = _kernel_tile(d1.shape[0], 16)
+                    return maxsim_k.maxsim_pallas(
+                        q1[None], qm1[None], d1, m1.astype(jnp.float32),
+                        block_docs=tile, interpret=interpret)[0]
+                return jax.vmap(one)(q, qm_f, d, m)
+        else:
+            def score_block(d, m):
+                tile = _kernel_tile(d.shape[0], 16)
+                return maxsim_k.maxsim_pallas(q, qm_f, d,
+                                              m.astype(jnp.float32),
+                                              block_docs=tile,
+                                              interpret=interpret)
 
     return _streaming_topk(score_block, (docs, d_mask), doc_ids, valid,
                            b=b, n=n, k=k, block_docs=scan.block_docs,
-                           per_query=False, score_dtype=jnp.float32)
+                           per_query=per_query, score_dtype=jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -292,36 +315,59 @@ def hamming_maxsim_topk(q_codes: Array, q_mask: Array, d_codes: Array,
                         valid: Optional[Array] = None,
                         scan: Optional[ScanConfig] = None
                         ) -> Tuple[Array, Array]:
-    """Streaming binary MaxSim top-k over a shared (N, Md) code corpus.
+    """Streaming binary MaxSim top-k.
 
-    Scores are int32 on every impl (v0's li.binary_maxsim dtype; the
-    sentinel is the int32 minimum). The Pallas kernel accumulates in f32
-    (its documented contract); its block scores are clamped to the int32
-    range and cast — real scores (|s| <= bits * Mq) are exact, only the
-    degenerate all-patches-masked sums (~ -Mq * 2^20) can lose ULPs.
+    d_codes/d_mask are either a shared (N, Md) code corpus or (B, P, Md)
+    per-query candidate pools — the same two layouts as
+    `quantized_maxsim_topk`. Scores are int32 on every impl (v0's
+    li.binary_maxsim dtype; the sentinel is the int32 minimum). The
+    Pallas kernel accumulates in f32 (its documented contract); its
+    block scores are clamped to the int32 range and cast — real scores
+    (|s| <= bits * Mq) are exact, only the degenerate
+    all-patches-masked sums (~ -Mq * 2^20) can lose ULPs.
     """
     scan = scan if scan is not None else DEFAULT
     mode = resolve_impl(scan.impl)
-    b, n = q_codes.shape[0], d_codes.shape[0]
-    doc_ids, valid = _prep(n, doc_ids, valid, False, b)
+    per_query = d_codes.ndim == 3
+    b = q_codes.shape[0]
+    n = d_codes.shape[1] if per_query else d_codes.shape[0]
+    doc_ids, valid = _prep(n, doc_ids, valid, per_query, b)
     ii = jnp.iinfo(jnp.int32)
 
     if mode == "jnp":
-        def score_block(d, m):
-            return li.binary_maxsim(q_codes, q_mask, d, m, bits)
+        if per_query:
+            def score_block(d, m):
+                return jax.vmap(
+                    lambda q1, qm1, d1, m1: li.binary_maxsim(
+                        q1[None], qm1[None], d1, m1, bits)[0]
+                )(q_codes, q_mask, d, m)
+        else:
+            def score_block(d, m):
+                return li.binary_maxsim(q_codes, q_mask, d, m, bits)
     else:
         interpret = mode == "interpret"
         qm_f = q_mask.astype(jnp.float32)
 
-        def score_block(d, m):
-            tile = _kernel_tile(d.shape[0], 64)
-            out = hamming_k.hamming_maxsim_pallas(
-                q_codes, qm_f, d.astype(jnp.int32), m.astype(jnp.float32),
-                bits=bits, block_docs=tile, interpret=interpret)
-            # only the lower bound can be exceeded (NEG_INF-masked sums);
-            # -2^31 is f32-exact, real scores are far below 2^31
-            return jnp.maximum(out, float(ii.min)).astype(jnp.int32)
+        if per_query:
+            def score_block(d, m):
+                def one(q1, qm1, d1, m1):
+                    tile = _kernel_tile(d1.shape[0], 64)
+                    return hamming_k.hamming_maxsim_pallas(
+                        q1[None], qm1[None], d1.astype(jnp.int32),
+                        m1.astype(jnp.float32), bits=bits,
+                        block_docs=tile, interpret=interpret)[0]
+                out = jax.vmap(one)(q_codes, qm_f, d, m)
+                return jnp.maximum(out, float(ii.min)).astype(jnp.int32)
+        else:
+            def score_block(d, m):
+                tile = _kernel_tile(d.shape[0], 64)
+                out = hamming_k.hamming_maxsim_pallas(
+                    q_codes, qm_f, d.astype(jnp.int32), m.astype(jnp.float32),
+                    bits=bits, block_docs=tile, interpret=interpret)
+                # only the lower bound can be exceeded (NEG_INF-masked
+                # sums); -2^31 is f32-exact, real scores are far below 2^31
+                return jnp.maximum(out, float(ii.min)).astype(jnp.int32)
 
     return _streaming_topk(score_block, (d_codes, d_mask), doc_ids, valid,
                            b=b, n=n, k=k, block_docs=scan.block_docs,
-                           per_query=False, score_dtype=jnp.int32)
+                           per_query=per_query, score_dtype=jnp.int32)

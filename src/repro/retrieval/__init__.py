@@ -12,8 +12,11 @@ Built-in backends (one module each — the template for new ones):
   ivf        — centroid routing over padded-dense buckets
   hnsw       — layered small-world graph routing (beam search)
   hamming    — binary codes + popcount scan
+  cascade    — staged funnel: hamming -> ADC -> float rerank, budgets
+               from HPCConfig.cascade (p1, p2)
 
-See docs/api.md for the `IndexBackend` contract.
+See docs/api.md for the `IndexBackend` contract and the
+search-stage (`search_candidates`) contract the cascade composes.
 """
 
 from repro.retrieval.base import (  # noqa: F401
@@ -26,9 +29,9 @@ from repro.retrieval.base import (  # noqa: F401
     get_backend,
     register_backend,
 )
-from repro.retrieval.config import HPCConfig  # noqa: F401
+from repro.retrieval.config import CascadeConfig, HPCConfig  # noqa: F401
 from repro.retrieval.retriever import Retriever  # noqa: F401
 
 # importing the backend modules installs them in the registry
-from repro.retrieval import (flat, float_flat, hamming,  # noqa: E402,F401
-                             hnsw, ivf)
+from repro.retrieval import (cascade, flat, float_flat,  # noqa: E402,F401
+                             hamming, hnsw, ivf)

@@ -3,27 +3,36 @@
 A backend owns ONE primary search structure (exhaustive flat scan, IVF
 routing, Hamming scan, ...) behind four methods over pytree state:
 
-    build(key, corpus, cfg)    -> RetrieverState
-    search(state, query, *, k) -> (scores (B, k), doc_ids (B, k))
-    storage_bytes(state)       -> {"payload": ..., ...}
-    save(path, state) / load(path) -> RetrieverState
+    build(key, corpus, cfg)             -> RetrieverState
+    search(state, query, *, k, scan)    -> (scores (B, k), doc_ids (B, k))
+    storage_bytes(state)                -> {"payload": ..., ...}
+    save(path, state) / load(path)      -> RetrieverState
 
 plus `shard_specs(state)` (logical-axis specs so the corpus dimension
-shards over the mesh — see repro/dist/sharding.py). Everything shared
-between backends — codebook training, corpus quantization, doc/query-side
-pruning, candidate rerank — lives in the `Retriever` facade
-(retriever.py) or in the helpers below, so a new backend is one file:
+shards over the mesh — see repro/dist/sharding.py) and the optional
+*search-stage* entry point
+
+    search_candidates(state, query, candidate_ids, *, k, scan)
+
+which scores only a (B, P) per-query id pool — the composable-stage
+contract the `cascade` backend chains (Hamming prefilter -> ADC scan ->
+float rerank). Everything shared between backends — codebook training,
+corpus quantization, doc/query-side pruning, candidate rerank — lives in
+the `Retriever` facade (retriever.py) or in the helpers below, so a new
+backend is one file:
 
     @register_backend("my_index")
     class MyBackend(IndexBackend):
         def build(self, key, corpus, cfg): ...
-        def search(self, state, query, *, k): ...
+        def search(self, state, query, *, k, scan=None): ...
         def storage_bytes(self, state): ...
 
 See docs/api.md for the full contract.
 """
 from __future__ import annotations
 
+import inspect
+import warnings
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -80,24 +89,35 @@ class RetrieverState(NamedTuple):
     rerank_mask: Array
 
     # v0 `HPCIndex` compatibility accessors -------------------------------
+    #
+    # DEPRECATED since PR 7 (scheduled for removal in v2.0): read
+    # `state.backend_state` and dispatch on its type instead. These
+    # properties predate the tagged-union state and only resolve the four
+    # v0 structures (a `cascade` state returns None from all of them).
+    # The frozen-v0 parity tests keep exercising them until removal.
+
     @property
     def flat(self) -> Optional[index_mod.FlatIndex]:
+        """Deprecated v0 accessor — use `backend_state` (removal: v2.0)."""
         s = self.backend_state
         return s if isinstance(s, index_mod.FlatIndex) else None
 
     @property
     def float_flat(self) -> Optional[index_mod.FloatFlatIndex]:
+        """Deprecated v0 accessor — use `backend_state` (removal: v2.0)."""
         s = self.backend_state
         return s if isinstance(s, index_mod.FloatFlatIndex) else None
 
     @property
     def ivf(self) -> Optional[index_mod.IVFIndex]:
+        """Deprecated v0 accessor — use `backend_state` (removal: v2.0)."""
         from repro.retrieval.ivf import IVFState
         s = self.backend_state
         return s.index if isinstance(s, IVFState) else None
 
     @property
     def hamming(self) -> Optional[index_mod.HammingIndex]:
+        """Deprecated v0 accessor — use `backend_state` (removal: v2.0)."""
         from repro.retrieval.hamming import HammingState
         s = self.backend_state
         return s.index if isinstance(s, HammingState) else None
@@ -110,10 +130,43 @@ class RetrieverState(NamedTuple):
 _REGISTRY: Dict[str, "IndexBackend"] = {}
 
 
+def _accepts_scan(fn) -> bool:
+    """Does this `search` implementation take the `scan=` keyword?"""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):   # builtins/C callables: assume modern
+        return True
+    return "scan" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
 def register_backend(name: str):
-    """Class decorator: `@register_backend("flat")` installs a singleton."""
+    """Class decorator: `@register_backend("flat")` installs a singleton.
+
+    `search` implementations must accept the full v1 signature
+    `(state, query, *, k, scan=None)`. Legacy out-of-tree backends
+    whose `search` predates the `scan=` keyword still register, but get
+    one `DeprecationWarning` here and a shim that strips `scan` before
+    calling them (scheduled for removal in v2.0 — accept `scan=` to
+    opt into the streaming-scan knobs).
+    """
     def deco(cls):
         cls.name = name
+        if not _accepts_scan(cls.search):
+            warnings.warn(
+                f"index backend {name!r}: search() does not accept the "
+                "scan= keyword; registering a compatibility shim that "
+                "drops it. Add `scan=None` to the signature — the shim "
+                "will be removed in v2.0.",
+                DeprecationWarning, stacklevel=3)
+            legacy_search = cls.search
+
+            def search(self, state, query, *, k, scan=None):
+                del scan  # legacy backend cannot use the scan knobs
+                return legacy_search(self, state, query, k=k)
+
+            search.__doc__ = legacy_search.__doc__
+            cls.search = search
         _REGISTRY[name] = cls()
         return cls
     return deco
@@ -126,8 +179,8 @@ def _ensure_builtin_backends():
     lazy hook covers callers that imported only a submodule (e.g. the
     `repro.core.pipeline` compat shim during `repro.core` package init).
     """
-    from repro.retrieval import (flat, float_flat, hamming,  # noqa: F401
-                                 hnsw, ivf)
+    from repro.retrieval import (cascade, flat, float_flat,  # noqa: F401
+                                 hamming, hnsw, ivf)
 
 
 def get_backend(name: str) -> "IndexBackend":
@@ -257,6 +310,33 @@ class IndexBackend:
         """
         raise NotImplementedError
 
+    def search_candidates(self, state: RetrieverState, query: Query,
+                          candidate_ids: Array, *, k: int,
+                          scan=None) -> Tuple[Array, Array]:
+        """Score only a (B, P) per-query candidate pool -> (B, k) top-k.
+
+        The composable search-stage entry point: `candidate_ids[b]` lists
+        the corpus positions query `b` may match (typically a coarser
+        stage's output ids); -1 marks empty pool slots and is never
+        scored. Output rows follow the same sentinel contract as
+        `search` — with fewer than k valid candidates (including k > P)
+        the tail rows carry doc_id -1 and sentinel scores. Cost must be
+        O(B * P), never O(N): implementations route through the scan
+        engine's per-query-candidates layout, no full-corpus gather.
+
+        `search(state, query, k=k)` is semantically this method with
+        `candidate_ids=None` (the whole corpus as the pool). Backends
+        whose structure already does its own candidate routing (ivf,
+        hnsw) may decline by raising NotImplementedError — stage
+        composition then excludes them.
+        """
+        if candidate_ids is None:
+            return self.search(state, query, k=k, scan=scan)
+        raise NotImplementedError(
+            f"backend {self.name!r} does not support candidate-restricted "
+            "search (search_candidates); use flat/float_flat/hamming as "
+            "cascade stages")
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         raise NotImplementedError
 
@@ -309,9 +389,10 @@ class IndexBackend:
     # -- persistence --------------------------------------------------------
     #
     # One flat .npz: ordered array leaves + the backend name + an optional
-    # static-aux scalar (IVF n_probe, Hamming bits). The treedef is NEVER
-    # serialized — it is reconstructed from `state_template`, so loading an
-    # untrusted index file deserializes arrays only (no pickle, no code).
+    # static-aux scalar or int tuple (IVF n_probe, Hamming bits, cascade
+    # (p1, p2, bits)). The treedef is NEVER serialized — it is
+    # reconstructed from `state_template`, so loading an untrusted index
+    # file deserializes arrays only (no pickle, no code).
 
     def _state_aux(self, state: RetrieverState):
         """Static aux carried by the backend state (None if stateless)."""
@@ -351,7 +432,11 @@ class IndexBackend:
             if saved != self.name:
                 raise ValueError(
                     f"index was saved by backend {saved!r}, not {self.name!r}")
-            aux = int(z["aux"]) if "aux" in z.files else None
+            if "aux" in z.files:
+                a = z["aux"]
+                aux = int(a) if a.ndim == 0 else tuple(int(x) for x in a)
+            else:
+                aux = None
             names = sorted(n for n in z.files if n.startswith("leaf_"))
             leaves = [jnp.asarray(z[n]) for n in names]
         treedef = jax.tree_util.tree_structure(self.state_template(aux))

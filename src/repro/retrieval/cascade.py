@@ -1,0 +1,197 @@
+"""`cascade` backend: the staged compression funnel (ROADMAP item).
+
+Composes three existing backends as *search stages* over one shared
+encode (codebook + quantized corpus, done once via `encode_corpus`):
+
+    stage 1  hamming     popcount prefilter over all N docs  -> top p1
+    stage 2  flat (ADC)  quantized rescore of the p1 pool    -> top p2
+    stage 3  float_flat  exact late-interaction rerank       -> top k
+
+Stages 2-3 run through `search_candidates` — the per-query (B, P)
+layout of the streaming scan engine — so the expensive stages cost
+O(B * p) rather than O(N); the float stage touches only p2/N of the
+corpus (the paper's "expensive stage touches ~1% of documents" regime).
+The `-1` sentinel contract holds at every boundary: a stage that
+surfaces fewer than its budget of valid candidates (including
+k > p2 > p1 > N misconfigurations) hands -1 rows downstream, where they
+are never scored and stay -1 in the final output.
+
+Budgets (p1, p2) come from `HPCConfig.cascade` at build time and ride
+in the state as static aux — the same pattern as IVF's `n_probe` — so
+`search(state, query, k=...)` stays self-contained and jit-stable.
+Member states nest inside `CascadeState`; persistence, sharding, stats,
+and the jaxpr budget analyzer all compose from the member backends.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import binary as binary_mod
+from repro.core import index as index_mod
+from repro.core import pruning
+from repro.retrieval.base import (Corpus, IndexBackend, Query,
+                                  RetrieverState, code_dtype, encode_corpus,
+                                  get_backend, register_backend)
+from repro.retrieval.config import HPCConfig
+from repro.retrieval.hamming import HammingState
+
+Array = jax.Array
+
+# Stage composition is fixed (registry names, coarse -> exact). Making
+# this data — not config — keeps the persisted aux a plain int tuple
+# (no backend names on disk) and the treedef reconstructible without
+# pickle. Future stages (DocPruner adaptive budgets, Sculpting merge)
+# slot in here once they exist as backends with `search_candidates`.
+STAGES = ("hamming", "flat", "float_flat")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CascadeState:
+    """Nested member states + the static (p1, p2) stage budgets."""
+
+    members: Tuple  # (HammingState, FlatIndex, FloatFlatIndex)
+    p1: int
+    p2: int
+
+    def tree_flatten(self):
+        return (self.members,), (self.p1, self.p2)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+
+@register_backend("cascade")
+class CascadeBackend(IndexBackend):
+    # the final stage scores raw embeddings — exact late-interaction
+    # scores, so the facade skips its quantized rerank (like float_flat)
+    exact_scores = True
+
+    def build(self, key: Array, corpus: Corpus, cfg: HPCConfig,
+              mesh=None) -> RetrieverState:
+        """One shared encode, three member structures over it.
+
+        The Hamming and ADC stages index the SAME pruned quantized
+        corpus (binary codes are the centroid indices read at b bits),
+        so the funnel adds only the float-stage embeddings on top of
+        what `flat` alone would store.
+        """
+        _, codebook, codes_full, codes, mask = encode_corpus(
+            key, corpus, cfg, mesh=mesh)
+        ham = HammingState(index_mod.build_hamming(codes, mask, cfg.bits),
+                           cfg.bits)
+        flat = index_mod.build_flat(codes, mask, codebook)
+        emb, fmask = corpus.embeddings, corpus.mask
+        if cfg.prune_side in ("doc", "both"):
+            pr = pruning.prune_topp(emb, corpus.salience, fmask, p=cfg.p)
+            emb, fmask = pr.embeddings, pr.mask
+        ff = index_mod.build_float_flat(emb, fmask)
+        return RetrieverState(
+            codebook=codebook,
+            backend_state=CascadeState((ham, flat, ff),
+                                       cfg.cascade.p1, cfg.cascade.p2),
+            rerank_codes=codes_full,
+            rerank_mask=corpus.mask)
+
+    # -- search -------------------------------------------------------------
+
+    def _views(self, state: RetrieverState):
+        """(backend, member-view RetrieverState) per stage.
+
+        A view is the outer state with `backend_state` swapped for one
+        member — member backends see exactly the state shape they built,
+        sharing the outer codebook/rerank leaves.
+        """
+        return [(get_backend(name), state._replace(backend_state=member))
+                for name, member in zip(STAGES, state.backend_state.members)]
+
+    def search(self, state: RetrieverState, query: Query, *, k: int,
+               scan=None) -> Tuple[Array, Array]:
+        """Run the funnel: full-corpus prefilter, then narrowing stages.
+
+        Stage outputs are *global doc ids*; members are built over the
+        same unsharded corpus (doc_ids = arange), so ids double as
+        positions for the next stage's `search_candidates` gather.
+        """
+        s = state.backend_state
+        (ham_b, ham_v), (flat_b, flat_v), (ff_b, ff_v) = self._views(state)
+        _, ids1 = ham_b.search(ham_v, query, k=s.p1, scan=scan)
+        _, ids2 = flat_b.search_candidates(flat_v, query, ids1, k=s.p2,
+                                           scan=scan)
+        return ff_b.search_candidates(ff_v, query, ids2, k=k, scan=scan)
+
+    # -- accounting ---------------------------------------------------------
+
+    def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
+        """Per-stage payloads (stage_* keys) + their sum as `payload`."""
+        out: Dict[str, int] = {}
+        total = 0
+        for name, (backend, view) in zip(STAGES, self._views(state)):
+            b = backend.storage_bytes(view)
+            out[f"stage_{name}"] = b["payload"]
+            total += b["payload"]
+            if "codebook" in b:          # shared across stages: count once
+                out.setdefault("codebook", b["codebook"])
+        out["payload"] = total
+        return out
+
+    def build_stats(self, state: RetrieverState) -> Dict[str, float]:
+        s = state.backend_state
+        stats = {"p1": float(s.p1), "p2": float(s.p2)}
+        for name, (backend, view) in zip(STAGES, self._views(state)):
+            for key, val in backend.build_stats(view).items():
+                stats[f"{name}_{key}"] = val
+        return stats
+
+    def abstract_state(self, *, n: int, md: int = 16, d: int = 16,
+                       k: int = 256, **knobs) -> RetrieverState:
+        """Compose the members' abstract states (shape-only, no alloc)."""
+        bits = knobs.get("bits", binary_mod.bits_for_k(k))
+        p1 = knobs.get("p1", 1024)
+        p2 = knobs.get("p2", 64)
+        members = []
+        for name in STAGES:
+            stage_knobs = {"bits": bits} if name == "hamming" else {}
+            ab = get_backend(name).abstract_state(n=n, md=md, d=d, k=k,
+                                                  **stage_knobs)
+            members.append(ab.backend_state)
+        sds, cdt = jax.ShapeDtypeStruct, code_dtype(k)
+        return RetrieverState(
+            codebook=sds((k, d), jnp.float32),
+            backend_state=CascadeState(tuple(members), p1, p2),
+            rerank_codes=sds((n, md), cdt),
+            rerank_mask=sds((n, md), jnp.bool_))
+
+    # -- sharding -----------------------------------------------------------
+
+    def shard_specs(self, state: RetrieverState):
+        """Compose member spec trees (each member backend's own policy)."""
+        s = state.backend_state
+        member_specs = tuple(
+            backend.shard_specs(view).backend_state
+            for backend, view in self._views(state))
+        return RetrieverState(
+            codebook=(None, None),
+            backend_state=CascadeState(member_specs, s.p1, s.p2),
+            rerank_codes=("corpus", None),
+            rerank_mask=("corpus", None))
+
+    # -- persistence --------------------------------------------------------
+
+    def _state_aux(self, state: RetrieverState):
+        s = state.backend_state
+        return (s.p1, s.p2, s.members[0].bits)
+
+    def state_template(self, aux) -> RetrieverState:
+        p1, p2, bits = aux
+        members = (
+            HammingState(index_mod.HammingIndex(0, 0, 0, 0), bits),
+            index_mod.FlatIndex(0, 0, 0, 0),
+            index_mod.FloatFlatIndex(0, 0, 0),
+        )
+        return RetrieverState(0, CascadeState(members, p1, p2), 0, 0)

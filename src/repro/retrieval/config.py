@@ -1,10 +1,11 @@
 """HPC-ColPali configuration (paper §III) + backend selection.
 
 `HPCConfig.backend` names the index backend ("float_flat", "flat", "ivf",
-"hamming") resolved through the `repro.retrieval` registry. The v0 knobs
-`mode`/`index` are still accepted as a deprecated alias pair and are kept
-populated on the config (derived from `backend`) so old readers keep
-working; new code should pass `backend=` only.
+"hamming", "cascade") resolved through the `repro.retrieval` registry.
+The v0 knobs `mode`/`index` are still accepted as a deprecated alias pair
+and are kept populated on the config (derived from `backend`) so old
+readers keep working; new code should pass `backend=` only. The alias
+pair is scheduled for removal in v2.0 (docs/api.md "Deprecations").
 """
 from __future__ import annotations
 
@@ -29,13 +30,55 @@ _MODE_INDEX_TO_BACKEND = {
 # backend name -> canonical (mode, index) for old readers. `hnsw` maps to
 # ("quantized", "ivf") — the nearest v0 spelling (a quantized routing
 # index); the deprecated mode/index pair can never *produce* hnsw.
+# `cascade` ends in a float rerank, so its nearest v0 spelling is the
+# float scan; like hnsw it can never be produced *from* mode/index.
 _BACKEND_TO_MODE_INDEX = {
     "float_flat": ("float", "flat"),
     "flat": ("quantized", "flat"),
     "ivf": ("quantized", "ivf"),
     "hnsw": ("quantized", "ivf"),
     "hamming": ("binary", "flat"),
+    "cascade": ("float", "flat"),
 }
+
+# The mode/index deprecation fires once per process, not once per
+# construction — sweeps that build hundreds of configs (benchmarks,
+# autotuning) should not drown real warnings. Tests reset this flag.
+_mode_index_warned = False
+
+
+def _warn_mode_index(backend: str) -> None:
+    global _mode_index_warned
+    if _mode_index_warned:
+        return
+    _mode_index_warned = True
+    # stacklevel: this helper -> __post_init__ -> dataclass __init__ ->
+    # the caller's HPCConfig(...) line.
+    warnings.warn(
+        "HPCConfig(mode=..., index=...) is deprecated and will be removed "
+        f"in v2.0; pass backend={backend!r} instead (this warning is "
+        "emitted once per process)",
+        DeprecationWarning, stacklevel=4)
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeConfig:
+    """Per-stage candidate budgets of the compression cascade.
+
+    The staged funnel (retrieval/cascade.py) narrows the corpus in three
+    fidelity steps: Hamming prefilter over all N docs -> ADC quantized
+    rescore of the top `p1` -> float late-interaction rerank of the top
+    `p2` -> final top-k. Budgets are baked into the built state as
+    static aux (like IVF `n_probe`), so searches jit per (p1, p2, k).
+
+    p1: candidates surviving the Hamming stage (scored by ADC).
+    p2: candidates surviving the ADC stage (scored in float) — the
+        "fraction of corpus touched by the expensive stage" knob; the
+        paper's target regime is p2/N of a few percent.
+    """
+
+    p1: int = 1024
+    p2: int = 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +86,8 @@ class HPCConfig:
     """Tunable knobs of HPC-ColPali (paper §III).
 
     Exactly one primary search structure is selected by `backend`; `mode`
-    and `index` are the deprecated v0 spelling (kept as derived aliases).
+    and `index` are the deprecated v0 spelling (kept as derived aliases,
+    removal scheduled for v2.0).
     """
 
     k: int = 256                     # codebook size (128/256/512)
@@ -53,6 +97,7 @@ class HPCConfig:
     index: Optional[Literal["flat", "ivf"]] = None
     ivf: IVFConfig = dataclasses.field(default_factory=IVFConfig)
     hnsw: HNSWConfig = dataclasses.field(default_factory=HNSWConfig)
+    cascade: CascadeConfig = dataclasses.field(default_factory=CascadeConfig)
     kmeans_iters: int = 25
     kmeans_restarts: int = 8         # independent codebook fits, best-of-N
                                      # by inertia (must match the
@@ -74,10 +119,7 @@ class HPCConfig:
             mode = self.mode if self.mode is not None else "quantized"
             index = self.index if self.index is not None else "flat"
             if self.mode is not None or self.index is not None:
-                warnings.warn(
-                    "HPCConfig(mode=..., index=...) is deprecated; pass "
-                    f"backend={_MODE_INDEX_TO_BACKEND[(mode, index)]!r}",
-                    DeprecationWarning, stacklevel=3)
+                _warn_mode_index(_MODE_INDEX_TO_BACKEND[(mode, index)])
             object.__setattr__(
                 self, "backend", _MODE_INDEX_TO_BACKEND[(mode, index)])
         elif self.backend not in _BACKEND_TO_MODE_INDEX:

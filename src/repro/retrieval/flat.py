@@ -39,6 +39,15 @@ class FlatBackend(IndexBackend):
             state.backend_state, query.embeddings, query.mask, k=k,
             scan=scan)
 
+    def search_candidates(self, state: RetrieverState, query: Query,
+                          candidate_ids, *, k: int,
+                          scan=None) -> Tuple[Array, Array]:
+        if candidate_ids is None:
+            return self.search(state, query, k=k, scan=scan)
+        return index_mod.search_flat_candidates(
+            state.backend_state, query.embeddings, query.mask,
+            candidate_ids, k=k, scan=scan)
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         codes = state.backend_state.codes
         cb = state.codebook

@@ -44,6 +44,15 @@ class FloatFlatBackend(IndexBackend):
             state.backend_state, query.embeddings, query.mask, k=k,
             scan=scan)
 
+    def search_candidates(self, state: RetrieverState, query: Query,
+                          candidate_ids, *, k: int,
+                          scan=None) -> Tuple[Array, Array]:
+        if candidate_ids is None:
+            return self.search(state, query, k=k, scan=scan)
+        return index_mod.search_float_flat_candidates(
+            state.backend_state, query.embeddings, query.mask,
+            candidate_ids, k=k, scan=scan)
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         e = state.backend_state.embeddings
         return {"payload": e.size * e.dtype.itemsize}

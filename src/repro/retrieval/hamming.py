@@ -61,6 +61,18 @@ class HammingBackend(IndexBackend):
         return index_mod.search_hamming(s.index, q_codes, query.mask,
                                         bits=s.bits, k=k, scan=scan)
 
+    def search_candidates(self, state: RetrieverState, query: Query,
+                          candidate_ids, *, k: int,
+                          scan=None) -> Tuple[Array, Array]:
+        if candidate_ids is None:
+            return self.search(state, query, k=k, scan=scan)
+        s = state.backend_state
+        q_codes = quant.quantize(query.embeddings, state.codebook,
+                                 code_dtype=code_dtype(1 << s.bits))
+        return index_mod.search_hamming_candidates(
+            s.index, q_codes, query.mask, candidate_ids,
+            bits=s.bits, k=k, scan=scan)
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         s = state.backend_state
         n_codes = int(s.index.codes.size)

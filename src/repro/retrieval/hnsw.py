@@ -60,6 +60,18 @@ class HNSWBackend(IndexBackend):
         return graph_mod.search_hnsw(s.index, query.embeddings, query.mask,
                                      ef_search=s.ef_search, k=k, scan=scan)
 
+    def search_candidates(self, state: RetrieverState, query: Query,
+                          candidate_ids, *, k: int,
+                          scan=None) -> Tuple[Array, Array]:
+        # hnsw declines the stage contract: the graph walk is the candidate
+        # generator, not a scorer over externally supplied pools.
+        if candidate_ids is None:
+            return self.search(state, query, k=k, scan=scan)
+        raise NotImplementedError(
+            "backend 'hnsw' generates candidates via its graph walk and "
+            "does not support candidate-restricted search; use "
+            "flat/float_flat/hamming as cascade stages")
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         ix = state.backend_state.index
         cb = state.codebook

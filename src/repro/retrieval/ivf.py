@@ -75,6 +75,18 @@ class IVFBackend(IndexBackend):
         return index_mod.search_ivf(s.index, query.embeddings, query.mask,
                                     n_probe=s.n_probe, k=k, scan=scan)
 
+    def search_candidates(self, state: RetrieverState, query: Query,
+                          candidate_ids, *, k: int,
+                          scan=None) -> Tuple[Array, Array]:
+        # ivf declines the stage contract: its bucketed layout has no
+        # position->doc addressing, and routing already narrows candidates.
+        if candidate_ids is None:
+            return self.search(state, query, k=k, scan=scan)
+        raise NotImplementedError(
+            "backend 'ivf' routes its own candidates (n_probe buckets) and "
+            "does not support candidate-restricted search; use "
+            "flat/float_flat/hamming as cascade stages")
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         codes = state.backend_state.index.bucket_codes
         cb = state.codebook

@@ -10,7 +10,6 @@ through `RetrieverState` pytrees, so build/search jit, shard (see
 from __future__ import annotations
 
 import dataclasses
-import inspect
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -76,19 +75,11 @@ class Retriever:
         pruned = Query(q_emb, q_mask, query.salience)
 
         # Steps 3-4 — backend candidate search (over-fetch for rerank).
-        # All built-in backends score through the streaming blocked
-        # scan (core/scan.py), configured by cfg.scan_block_docs/scan_impl.
-        # Out-of-tree backends written against the pre-scan signature
-        # search(state, query, *, k) are still called without `scan`.
+        # All backends take the full v1 signature with `scan=` — legacy
+        # out-of-tree backends get a kwargs-stripping shim at registration
+        # (base.register_backend), so no signature sniffing here.
         n_cand = k if cfg.rerank == 0 else max(k, cfg.rerank)
-        params = inspect.signature(backend.search).parameters
-        takes_scan = "scan" in params or any(
-            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
-        if takes_scan:
-            scores, ids = backend.search(state, pruned, k=n_cand,
-                                         scan=cfg.scan)
-        else:
-            scores, ids = backend.search(state, pruned, k=n_cand)
+        scores, ids = backend.search(state, pruned, k=n_cand, scan=cfg.scan)
 
         # Step 5 — rerank candidates with unpruned quantized MaxSim.
         if cfg.rerank and not backend.exact_scores:

@@ -170,8 +170,8 @@ def _queries(data):
 # ---------------------------------------------------------------------------
 
 def test_registry_resolves_all_backends():
-    assert available_backends() == ("flat", "float_flat", "hamming", "hnsw",
-                                    "ivf")
+    assert available_backends() == ("cascade", "flat", "float_flat",
+                                    "hamming", "hnsw", "ivf")
     for name in available_backends():
         b = get_backend(name)
         assert b.name == name
@@ -185,27 +185,29 @@ def test_registry_unknown_backend_raises():
 
 def test_out_of_tree_backend_with_legacy_search_signature(data):
     """An out-of-tree backend written against the pre-scan contract
-    search(state, query, *, k) must keep working: the facade only passes
-    `scan=` to backends whose signature accepts it."""
+    search(state, query, *, k) must keep working: registration now warns
+    once (DeprecationWarning) and installs a kwargs-stripping shim, so
+    the facade can always pass `scan=` without sniffing signatures."""
     from repro.retrieval import base as base_mod
 
-    @base_mod.register_backend("legacy_sig")
-    class LegacyBackend(base_mod.IndexBackend):
-        exact_scores = True
+    with pytest.warns(DeprecationWarning, match="scan"):
+        @base_mod.register_backend("legacy_sig")
+        class LegacyBackend(base_mod.IndexBackend):
+            exact_scores = True
 
-        def build(self, key, corpus, cfg, mesh=None):
-            n = corpus.embeddings.shape[0]
-            return base_mod.RetrieverState(
-                jnp.zeros((1, 1)), jnp.arange(n, dtype=jnp.int32),
-                jnp.zeros((n, 1), jnp.uint8), jnp.zeros((n, 1), bool))
+            def build(self, key, corpus, cfg, mesh=None):
+                n = corpus.embeddings.shape[0]
+                return base_mod.RetrieverState(
+                    jnp.zeros((1, 1)), jnp.arange(n, dtype=jnp.int32),
+                    jnp.zeros((n, 1), jnp.uint8), jnp.zeros((n, 1), bool))
 
-        def search(self, state, query, *, k):          # no `scan` kwarg
-            b = query.embeddings.shape[0]
-            ids = jnp.tile(state.backend_state[None, :k], (b, 1))
-            return jnp.zeros((b, k)), ids
+            def search(self, state, query, *, k):      # no `scan` kwarg
+                b = query.embeddings.shape[0]
+                ids = jnp.tile(state.backend_state[None, :k], (b, 1))
+                return jnp.zeros((b, k)), ids
 
-        def storage_bytes(self, state):
-            return {}
+            def storage_bytes(self, state):
+                return {}
 
     try:
         r = Retriever(HPCConfig(backend="legacy_sig"))
@@ -213,8 +215,32 @@ def test_out_of_tree_backend_with_legacy_search_signature(data):
         scores, ids = r.search(state, _queries(data), k=3)
         assert ids.shape == (data.query_patches.shape[0], 3)
         np.testing.assert_array_equal(np.asarray(ids[0]), [0, 1, 2])
+        # the shim accepts (and drops) the scan kwarg explicitly too
+        from repro.core.scan import ScanConfig
+        s2, i2 = get_backend("legacy_sig").search(
+            state, _queries(data), k=3, scan=ScanConfig(block_docs=7))
+        np.testing.assert_array_equal(np.asarray(i2), np.asarray(ids))
     finally:
         base_mod._REGISTRY.pop("legacy_sig", None)
+
+
+def test_modern_backend_registration_does_not_warn(recwarn):
+    """Backends that accept scan= (or **kwargs) register silently."""
+    from repro.retrieval import base as base_mod
+
+    @base_mod.register_backend("modern_sig")
+    class ModernBackend(base_mod.IndexBackend):
+        def search(self, state, query, *, k, scan=None):
+            raise NotImplementedError
+
+        def storage_bytes(self, state):
+            return {}
+
+    try:
+        assert not [w for w in recwarn
+                    if issubclass(w.category, DeprecationWarning)]
+    finally:
+        base_mod._REGISTRY.pop("modern_sig", None)
 
 
 def test_code_dtype_boundary():
@@ -354,16 +380,34 @@ def test_shard_specs_corpus_axis(data):
 # HPCConfig deprecation shim
 # ---------------------------------------------------------------------------
 
-def test_config_mode_index_derive_backend():
-    with pytest.warns(DeprecationWarning):
+def test_config_mode_index_derive_backend(monkeypatch):
+    from repro.retrieval import config as config_mod
+
+    # the deprecation warns once per process; reset the flag per assert
+    monkeypatch.setattr(config_mod, "_mode_index_warned", False)
+    with pytest.warns(DeprecationWarning, match="removed in v2.0"):
         cfg = HPCConfig(mode="binary")
     assert cfg.backend == "hamming"
+    monkeypatch.setattr(config_mod, "_mode_index_warned", False)
     with pytest.warns(DeprecationWarning):
         cfg = HPCConfig(mode="quantized", index="ivf")
     assert cfg.backend == "ivf"
+    monkeypatch.setattr(config_mod, "_mode_index_warned", False)
     with pytest.warns(DeprecationWarning):
         cfg = HPCConfig(mode="float")
     assert cfg.backend == "float_flat"
+
+
+def test_config_mode_index_warns_once_per_process(monkeypatch, recwarn):
+    from repro.retrieval import config as config_mod
+
+    monkeypatch.setattr(config_mod, "_mode_index_warned", False)
+    with pytest.warns(DeprecationWarning):
+        HPCConfig(mode="binary")
+    recwarn.clear()
+    HPCConfig(mode="binary")               # second construction: silent
+    assert not [w for w in recwarn
+                if issubclass(w.category, DeprecationWarning)]
 
 
 def test_config_backend_wins_and_populates_aliases():
