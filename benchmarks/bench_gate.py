@@ -73,6 +73,16 @@ GATED = [
     (("cascade", "cascade_recall10_vs_flat"), "floor", False, 0.95),
     (("cascade", "cascade_ms_per_query"), "lower", True, None),
     (("cascade", "cascade_float_frac"), "ceiling", False, 0.05),
+    # live churn (benchmarks/churn.py — LSM segment store under
+    # interleaved add/delete). The 0.99 floor IS the tentpole acceptance
+    # criterion: a grown-and-pruned index must answer within 1% of a
+    # from-scratch rebuild of the same live corpus. recall itself is
+    # additionally gated against the baseline band; compact_ms is the
+    # steady-state segment fold, calib-normalised like other wall-clock
+    # metrics.
+    (("churn", "churn_recall10_vs_rebuild"), "floor", False, 0.99),
+    (("churn", "churn_recall10"), "higher", False, None),
+    (("churn", "compact_ms"), "lower", True, None),
 ]
 
 

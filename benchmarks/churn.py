@@ -1,0 +1,132 @@
+"""Live-churn benchmark: interleaved add/delete/query without rebuild.
+
+The LSM segment store's acceptance contract (docs/design.md §9): an index
+grown via `add` and pruned via `delete` must answer with recall@10 within
+1% of a from-scratch rebuild of the same live corpus, and `compact` must
+fold the segments without losing live documents.
+
+`churn_metrics` drives one backend through rounds of mutation —
+
+    build(base) -> [add(delta); delete(sample); search] x rounds
+                -> compact -> search
+
+— and scores both the churned index and a fresh rebuild of the final
+live corpus against exact float MaxSim ground truth:
+
+  * ``churn_recall10``            — recall@10 of the churned index
+  * ``rebuild_recall10``          — recall@10 of the from-scratch rebuild
+  * ``churn_recall10_vs_rebuild`` — the gated ratio (floor 0.99 in
+    benchmarks/bench_gate.py: within 1% of rebuild)
+  * ``compact_recall10``          — recall@10 after compaction
+  * ``compact_ms``                — wall-clock of the compact fold
+    (calib-normalised in the gate)
+  * ``live_docs`` / ``tombstone_frac`` / ``segments`` — the satellite
+    accounting contract, read straight from `Retriever.build_stats`
+    before compaction (deleted docs stop counting while their bytes
+    are still resident).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+
+def _recall_vs_gt(ids: np.ndarray, gt, k: int = 10) -> float:
+    hits, tot = 0, 0
+    for row, want in zip(np.asarray(ids)[:, :k], gt):
+        hits += len(set(int(x) for x in row if x >= 0)
+                    & set(want[:k].tolist()))
+        tot += k
+    return hits / tot
+
+
+def _gt_topk(q_emb, q_mask, d_emb, d_mask, ids, k: int = 10):
+    """Exact float MaxSim top-k over the live corpus (the oracle)."""
+    out = []
+    for b in range(q_emb.shape[0]):
+        sims = np.einsum("md,npd->mnp", q_emb[b], d_emb)
+        sims = np.where(d_mask[None, :, :], sims, -np.inf)
+        score = (sims.max(-1) * q_mask[b][:, None]).sum(0)
+        out.append(ids[np.argsort(-score)[:k]])
+    return out
+
+
+def churn_metrics(backend: str = "flat", seed: int = 0) -> Dict[str, float]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import synthetic
+    from repro.retrieval import Corpus, HPCConfig, Query, Retriever
+
+    spec = synthetic.CorpusSpec(n_docs=256, n_queries=32, n_patches=8,
+                                n_q_patches=4, dim=32, n_topics=6,
+                                patches_per_topic=8, noise=0.1)
+    data = synthetic.make_retrieval_corpus(jax.random.PRNGKey(seed), spec)
+    query = Query(data.query_patches, data.query_mask, data.query_salience)
+    emb = np.asarray(data.doc_patches)
+    msk = np.asarray(data.doc_mask)
+    sal = np.asarray(data.doc_salience)
+
+    def corpus(lo, hi):
+        return Corpus(jnp.asarray(emb[lo:hi]), jnp.asarray(msk[lo:hi]),
+                      jnp.asarray(sal[lo:hi]))
+
+    cfg = HPCConfig(k=64, p=80.0, backend=backend, kmeans_iters=10,
+                    kmeans_restarts=2, rerank=32)
+    r = Retriever(cfg)
+    key = jax.random.PRNGKey(1)
+
+    n_base, n_total, rounds = 224, 256, 4
+    state = r.build(key, corpus(0, n_base))
+    rng = np.random.default_rng(seed)
+    hi = n_base
+    dead: set = set()
+    per_round = (n_total - n_base) // rounds
+    for _ in range(rounds):
+        state = r.add(state, corpus(hi, hi + per_round))   # ids hi..hi+pr-1
+        hi += per_round
+        alive = np.array(sorted(set(range(hi)) - dead))
+        kill = rng.choice(alive, size=min(6, alive.size // 4), replace=False)
+        state = r.delete(state, kill)
+        dead.update(int(x) for x in kill)
+        r.search(state, query, k=10)        # keep the serve path hot
+
+    live_ids = np.array(sorted(set(range(hi)) - dead))
+    gt = _gt_topk(np.asarray(query.embeddings), np.asarray(query.mask),
+                  emb[live_ids], msk[live_ids], live_ids)
+
+    _, ids_churn = r.search(state, query, k=10)
+    stats = r.build_stats(state)
+
+    # same key as the churned build on purpose: the rebuild is the
+    # comparison baseline, so codebook seeding must not differ
+    rb_state = r.build(key, Corpus(jnp.asarray(emb[live_ids]),  # noqa: JAX01
+                                   jnp.asarray(msk[live_ids]),
+                                   jnp.asarray(sal[live_ids])))
+    _, ids_rb = r.search(rb_state, query, k=10)
+    ids_rb = np.asarray(ids_rb)
+    ids_rb_global = np.where(ids_rb >= 0,
+                             live_ids[np.maximum(ids_rb, 0)], -1)
+
+    jax.block_until_ready(
+        jax.tree_util.tree_leaves(r.compact(state)))   # warm the fold path
+    t0 = time.perf_counter()
+    state_c = r.compact(state)
+    jax.block_until_ready(jax.tree_util.tree_leaves(state_c))
+    compact_ms = (time.perf_counter() - t0) * 1e3
+    _, ids_c = r.search(state_c, query, k=10)
+
+    churn = _recall_vs_gt(ids_churn, gt)
+    rebuild = _recall_vs_gt(ids_rb_global, gt)
+    return {
+        "churn_recall10": churn,
+        "rebuild_recall10": rebuild,
+        "churn_recall10_vs_rebuild": churn / max(rebuild, 1e-9),
+        "compact_recall10": _recall_vs_gt(ids_c, gt),
+        "compact_ms": compact_ms,
+        "live_docs": stats["live_docs"],
+        "tombstone_frac": stats["tombstone_frac"],
+        "segments": stats["segments"],
+    }

@@ -18,7 +18,7 @@ import time
 
 import numpy as np
 
-from benchmarks import (ann_compare, kernel_bench, latency, rag_bench,
+from benchmarks import (ann_compare, churn, kernel_bench, latency, rag_bench,
                         retrieval_quality, storage)
 from benchmarks.common import calibrate_ms, csv_row
 
@@ -86,6 +86,15 @@ def smoke(json_path=None) -> int:
           f"{casc['cascade_ms_per_query']:.3f} ms/q")
     print("== smoke: streaming flat scan (wired search path) ==")
     scan = kernel_bench.flat_scan_metrics()
+    print("== smoke: live churn (LSM segments, add/delete interleaved) ==")
+    churn_m = churn.churn_metrics()
+    print(f"  recall@10={churn_m['churn_recall10']:.3f} "
+          f"(rebuild {churn_m['rebuild_recall10']:.3f}, "
+          f"ratio {churn_m['churn_recall10_vs_rebuild']:.3f})  "
+          f"live={churn_m['live_docs']:.0f} "
+          f"tombstone_frac={churn_m['tombstone_frac']:.2%} "
+          f"over {churn_m['segments']:.0f} segments  "
+          f"compact {churn_m['compact_ms']:.2f} ms")
     print("== smoke: storage footprint ==")
     storage.run(verbose=False)
     print("== smoke: serving latency (padding ladder, open-loop) ==")
@@ -126,6 +135,7 @@ def smoke(json_path=None) -> int:
         "ann": ann,
         "scan": scan,
         "cascade": casc,
+        "churn": churn_m,
     }
     if json_path:
         with open(json_path, "w") as f:

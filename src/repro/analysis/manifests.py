@@ -104,6 +104,32 @@ def _backend_trace(backend_name: str, **knobs):
     return trace
 
 
+def _segmented_trace(backend_name: str, seg_fn: Callable[[int], Tuple],
+                     **knobs):
+    """Trace builder for `backend.search` over a *segmented* state.
+
+    `seg_fn(n)` maps the corpus-size axis to the per-segment capacity
+    tuple (for ivf: per-segment *bucket* caps), so the n / n_alt traces
+    keep identical segment structure and intermediates pair positionally.
+    """
+    def trace(n: int):
+        backend = get_backend(backend_name)
+        state = backend.abstract_state(n=n, md=MD, d=D, k=K,
+                                       segments=seg_fn(n), **knobs)
+        query = abstract_query()
+
+        def fn(state, query):
+            return backend.search(state, query, k=TOP_K, scan=SCAN)
+        return fn, (state, query)
+    return trace
+
+
+def _lsm_segments(n: int) -> Tuple[int, int, int]:
+    """The steady churn shape: one base segment, one grown delta, one
+    fresh small append — all block-aligned so the two traces pair."""
+    return (n, n >> 4, 256)
+
+
 def _rerank_trace(n: int):
     """Facade rerank: gather candidate codes, rescore unpruned."""
     r = Retriever(HPCConfig(backend="flat", scan_block_docs=SCAN.block_docs,
@@ -226,6 +252,43 @@ for _m in (
               "stages gather per-query (B, p1)/(B, p2) pools — "
               "O(budget), never a full-corpus gather. Float scores out "
               "(exact rerank)."),
+    BudgetManifest(
+        name="search_flat_segmented",
+        trace=_segmented_trace("flat", _lsm_segments),
+        notes="LSM segment sweep: same blocked scan per segment with the "
+              "(B, k) merge buffer carried across — per-segment ids/valid "
+              "stay O(cap), nothing new scales with N."),
+    BudgetManifest(
+        name="search_float_flat_segmented",
+        trace=_segmented_trace("float_flat", _lsm_segments),
+        notes="Float segment sweep: block slices per segment; tombstone "
+              "live-bits add 1 B/slot."),
+    BudgetManifest(
+        name="search_hamming_segmented",
+        trace=_segmented_trace("hamming", _lsm_segments),
+        out_dtypes=(jnp.int32, jnp.int32),
+        notes="Binary segment sweep: int32 popcount scores end to end, "
+              "merge buffer carried across segments."),
+    BudgetManifest(
+        name="search_ivf_segmented",
+        trace=_segmented_trace(
+            "ivf", lambda n: (2 * n // IVF_N_LIST, 8),
+            n_list=IVF_N_LIST, n_probe=8),
+        notes="Shared routing centroids scored once; per-segment probed "
+              "gathers scale with that segment's bucket cap (2N/n_list "
+              "for the base, O(1) for deltas)."),
+    BudgetManifest(
+        name="search_hnsw_segmented",
+        trace=_segmented_trace("hnsw", lambda n: (n,)),
+        notes="Single growable graph segment: the walk is the monolithic "
+              "one plus an O(N) live-bit lookup folded into the validity "
+              "mask."),
+    BudgetManifest(
+        name="search_cascade_segmented",
+        trace=_segmented_trace("cascade", _lsm_segments, p1=1024, p2=64),
+        notes="Segmented funnel: hamming prefilter sweeps segments "
+              "blocked; ADC/float stages resolve global ids via pos_of_id "
+              "(O(B * budget) gathers) across segments."),
     BudgetManifest(
         name="retriever_rerank",
         trace=_rerank_trace,

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scan as scan_mod
-from repro.core.index import doc_mean_vectors, mean_pool
+from repro.core.index import doc_mean_vectors, mean_pool, segment_capacity
 
 Array = jax.Array
 
@@ -165,6 +165,44 @@ def _connect(nbrs: np.ndarray, x: np.ndarray, i: int, found: list, cap: int
             row[len(keep):] = -1
 
 
+def _insert_np(x: np.ndarray, nbrs: np.ndarray, lvl: np.ndarray,
+               entry: int, top: int, order, ef_construction: int, m: int
+               ) -> Tuple[int, int]:
+    """Insert nodes `order` into the adjacency in place (Malkov Alg. 1).
+
+    The core sequential insert shared by `build_hnsw` (bulk, entry=-1),
+    `hnsw_insert` (incremental append into a populated graph) and
+    `hnsw_compact` (re-insert of live survivors). entry < 0 means the
+    graph is empty: the first inserted node becomes the entry point.
+    Returns the possibly-updated (entry, top).
+    """
+    width = 2 * m
+    for i in order:
+        i = int(i)
+        li_ = int(lvl[i])
+        if entry < 0:
+            entry, top = i, li_
+            continue
+        cur = entry
+        for lev in range(top, li_, -1):
+            cur = _greedy_np(x, nbrs[lev], cur, x[i])
+        for lev in range(min(li_, top), -1, -1):
+            found = _search_layer_np(x, nbrs[lev], cur, x[i],
+                                     ef_construction)
+            _connect(nbrs[lev], x, i, found, width if lev == 0 else m)
+            cur = found[0]
+        if li_ > top:
+            entry, top = i, li_
+    return entry, top
+
+
+def _draw_levels(key: Array, n: int, config: HNSWConfig) -> np.ndarray:
+    """Exponentially-decaying level draws, capped at the static count."""
+    u = np.asarray(jax.random.uniform(key, (n,), minval=1e-12, maxval=1.0))
+    ml = 1.0 / math.log(max(config.m, 2))
+    return np.minimum((-np.log(u) * ml).astype(np.int64), config.levels - 1)
+
+
 def build_hnsw(key: Array, codes: Array, mask: Array, codebook: Array,
                config: HNSWConfig, doc_ids: Optional[Array] = None
                ) -> HNSWIndex:
@@ -180,26 +218,10 @@ def build_hnsw(key: Array, codes: Array, mask: Array, codebook: Array,
     doc_vecs = doc_mean_vectors(codes, mask, codebook)
     x = np.asarray(doc_vecs, np.float32)
 
-    m, width, n_levels = config.m, 2 * config.m, config.levels
-    # exponentially-decaying level assignment, capped at the static count
-    u = np.asarray(jax.random.uniform(key, (n,), minval=1e-12, maxval=1.0))
-    ml = 1.0 / math.log(max(m, 2))
-    lvl = np.minimum((-np.log(u) * ml).astype(np.int64), n_levels - 1)
-
-    nbrs = np.full((n_levels, n, width), -1, np.int64)
-    entry, top = 0, int(lvl[0])
-    for i in range(1, n):
-        li_ = int(lvl[i])
-        cur = entry
-        for lev in range(top, li_, -1):
-            cur = _greedy_np(x, nbrs[lev], cur, x[i])
-        for lev in range(min(li_, top), -1, -1):
-            found = _search_layer_np(x, nbrs[lev], cur, x[i],
-                                     config.ef_construction)
-            _connect(nbrs[lev], x, i, found, width if lev == 0 else m)
-            cur = found[0]
-        if li_ > top:
-            entry, top = i, li_
+    lvl = _draw_levels(key, n, config)
+    nbrs = np.full((config.levels, n, 2 * config.m), -1, np.int64)
+    entry, top = _insert_np(x, nbrs, lvl, -1, -1, range(n),
+                            config.ef_construction, config.m)
 
     return HNSWIndex(
         doc_vecs=doc_vecs.astype(jnp.float32),
@@ -310,6 +332,157 @@ def search_hnsw(index: HNSWIndex, q: Array, q_mask: Array, *, ef_search: int,
         lambda v: hnsw_candidates(index, v, ef_search=ef_search))(q_vec)
     valid = cand >= 0                                         # (B, ef)
     safe = jnp.where(valid, cand, 0)
+    cand_codes = index.codes[safe]                            # (B, ef, Md)
+    cand_mask = index.mask[safe] & valid[..., None]
+    ids = jnp.where(valid, index.doc_ids[safe], -1)
+    return scan_mod.quantized_maxsim_topk(
+        q, q_mask, cand_codes, cand_mask, index.codebook, k=k,
+        doc_ids=ids, valid=valid, scan=scan)
+
+
+# ---------------------------------------------------------------------------
+# Incremental mutation (segmented LSM store — docs/design.md §9)
+# ---------------------------------------------------------------------------
+#
+# Unlike the flat-family backends, HNSW keeps ONE capacity-padded segment:
+# appends insert into the existing adjacency (Malkov Alg. 1, the same
+# host-side routine the bulk build runs), growing the arrays to the next
+# pow2 capacity bucket only when full. Tombstoned nodes stay in the graph
+# as routable waypoints — removing their edges would fragment the
+# small-world structure — and are filtered at scoring time via the live
+# mask (`search_hnsw_live`). `hnsw_compact` physically drops them by
+# re-inserting the live survivors (with their STORED level draws) into a
+# fresh graph.
+
+_INSERT_KEY = 0x5eed  # deterministic level-draw stream for appends
+
+
+def _filled_count(doc_ids: np.ndarray) -> int:
+    """Occupied row count — rows are filled front-to-back, padding is -1."""
+    return int(np.sum(doc_ids >= 0))
+
+
+def _grow_dim(arr: Array, axis: int, cap: int, fill) -> Array:
+    """Pad `axis` of arr to `cap` with `fill`."""
+    n = arr.shape[axis]
+    if n == cap:
+        return arr
+    shape = list(arr.shape)
+    shape[axis] = cap - n
+    pad = jnp.full(tuple(shape), fill, arr.dtype)
+    return jnp.concatenate([arr, pad], axis=axis)
+
+
+def hnsw_insert(index: HNSWIndex, live: Array, codes: Array, mask: Array,
+                doc_ids: Array, config: HNSWConfig,
+                levels: Optional[np.ndarray] = None
+                ) -> Tuple[HNSWIndex, Array]:
+    """Append new documents into an existing graph (no rebuild).
+
+    Host-side sequential insert, like the build. Level draws are a
+    deterministic function of the graph's fill count (fold_in of a fixed
+    key), so the same mutation history always yields the same graph.
+    Arrays grow to the next pow2 capacity bucket (`segment_capacity`)
+    only when the current padding is exhausted, so repeated small appends
+    reuse the same jit signature. Padding rows have no in-edges and are
+    never an entry point, so the search beam cannot reach them.
+
+    Returns the new (index, live); new rows are live, old live bits are
+    carried (tombstones stay routable but filtered).
+    """
+    n_new = int(codes.shape[0])
+    ids_np = np.asarray(index.doc_ids)
+    filled = _filled_count(ids_np)
+    cap_now = int(ids_np.shape[0])
+    cap = max(cap_now, segment_capacity(filled + n_new))
+
+    if levels is None:
+        key = jax.random.fold_in(jax.random.PRNGKey(_INSERT_KEY), filled)
+        levels = _draw_levels(key, n_new, config)
+    new_vecs = doc_mean_vectors(codes, mask, index.codebook)
+
+    # host copies, grown to cap
+    x = np.zeros((cap, index.doc_vecs.shape[1]), np.float32)
+    x[:cap_now] = np.asarray(index.doc_vecs, np.float32)
+    x[filled:filled + n_new] = np.asarray(new_vecs, np.float32)
+    nbrs = np.full((config.levels, cap, 2 * config.m), -1, np.int64)
+    nbrs[:, :cap_now] = np.asarray(index.neighbors)
+    lvl = np.full((cap,), -1, np.int64)
+    lvl[:cap_now] = np.asarray(index.node_level)
+    lvl[filled:filled + n_new] = levels
+
+    entry = int(index.entry) if filled > 0 else -1
+    top = int(lvl[entry]) if filled > 0 else -1
+    entry, top = _insert_np(x, nbrs, lvl, entry, top,
+                            range(filled, filled + n_new),
+                            config.ef_construction, config.m)
+
+    slot = jnp.arange(cap)
+    new_rows = (slot >= filled) & (slot < filled + n_new)
+    out = HNSWIndex(
+        doc_vecs=jnp.asarray(x),
+        neighbors=jnp.asarray(nbrs, jnp.int32),
+        entry=jnp.int32(entry),
+        node_level=jnp.asarray(lvl, jnp.int32),
+        codes=_grow_dim(index.codes, 0, cap, 0).at[filled:filled + n_new]
+              .set(codes.astype(index.codes.dtype)),
+        mask=_grow_dim(index.mask, 0, cap, False)
+             .at[filled:filled + n_new].set(mask),
+        doc_ids=_grow_dim(index.doc_ids, 0, cap, -1)
+                .at[filled:filled + n_new].set(doc_ids.astype(jnp.int32)),
+        codebook=index.codebook)
+    live_out = jnp.where(new_rows, True,
+                         _grow_dim(live.astype(bool), 0, cap, False))
+    return out, live_out
+
+
+def hnsw_compact(index: HNSWIndex, live: Array, config: HNSWConfig
+                 ) -> Tuple[HNSWIndex, Array]:
+    """Drop tombstones: re-insert the live survivors into a fresh graph.
+
+    Survivors keep their STORED level draws and their original relative
+    order, so compaction is deterministic (no new randomness) and the
+    graph quality matches a bulk build over the live corpus.
+    """
+    ids_np = np.asarray(index.doc_ids)
+    lv = np.asarray(live).astype(bool).reshape(-1)
+    keep = np.flatnonzero(lv & (ids_np >= 0))
+    n_live = int(keep.size)
+    cap = segment_capacity(n_live)
+
+    x = np.zeros((cap, index.doc_vecs.shape[1]), np.float32)
+    x[:n_live] = np.asarray(index.doc_vecs, np.float32)[keep]
+    lvl = np.full((cap,), -1, np.int64)
+    lvl[:n_live] = np.asarray(index.node_level)[keep]
+    nbrs = np.full((config.levels, cap, 2 * config.m), -1, np.int64)
+    entry, _ = _insert_np(x, nbrs, lvl, -1, -1, range(n_live),
+                          config.ef_construction, config.m)
+
+    keep_j = jnp.asarray(keep, jnp.int32)
+    out = HNSWIndex(
+        doc_vecs=jnp.asarray(x),
+        neighbors=jnp.asarray(nbrs, jnp.int32),
+        entry=jnp.int32(max(entry, 0)),
+        node_level=jnp.asarray(lvl, jnp.int32),
+        codes=_grow_dim(index.codes[keep_j], 0, cap, 0),
+        mask=_grow_dim(index.mask[keep_j], 0, cap, False),
+        doc_ids=_grow_dim(index.doc_ids[keep_j], 0, cap, -1),
+        codebook=index.codebook)
+    return out, jnp.arange(cap) < n_live
+
+
+@partial(jax.jit, static_argnames=("ef_search", "k", "scan"))
+def search_hnsw_live(index: HNSWIndex, live: Array, q: Array, q_mask: Array,
+                     *, ef_search: int, k: int, scan=None
+                     ) -> Tuple[Array, Array]:
+    """`search_hnsw` with a tombstone mask: dead nodes still route the
+    beam (their edges are intact) but are excluded from scoring via the
+    valid-mask contract — exactly NEG_INF scores, -1 ids."""
+    q_vec = mean_pool(q, q_mask)                              # (B, D)
+    _, cand = jax.vmap(
+        lambda v: hnsw_candidates(index, v, ef_search=ef_search))(q_vec)
+    safe = jnp.where(cand >= 0, cand, 0)
+    valid = (cand >= 0) & live[safe]                          # (B, ef)
     cand_codes = index.codes[safe]                            # (B, ef, Md)
     cand_mask = index.mask[safe] & valid[..., None]
     ids = jnp.where(valid, index.doc_ids[safe], -1)

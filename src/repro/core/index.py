@@ -21,10 +21,11 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quantization as quant
 from repro.core import scan as scan_mod
@@ -207,31 +208,44 @@ def build_ivf(key: Array, codes: Array, mask: Array, codebook: Array,
     cap = config.bucket_cap
     if cap == 0:
         cap = int(max(8, 2 * -(-n // config.n_list)))         # 2x mean load
-    # Dense scatter into padded buckets (host-side friendly, but pure jnp).
+    bucket_codes, bucket_mask, bucket_valid, bucket_ids = _bucket_scatter(
+        codes, mask, doc_ids, assign_, config.n_list, cap)
+    return IVFIndex(cents, bucket_codes, bucket_mask, bucket_valid,
+                    bucket_ids, codebook)
+
+
+def _bucket_scatter(codes: Array, mask: Array, doc_ids: Array,
+                    assign_: Array, n_list: int, cap: int
+                    ) -> Tuple[Array, Array, Array, Array]:
+    """Dense scatter into padded (n_list, cap, ...) buckets (pure jnp).
+
+    Shared between `build_ivf` and `make_ivf_segment` (the append path,
+    which re-uses existing routing centroids). Docs whose within-bucket
+    rank exceeds `cap` scatter to the out-of-bounds slot `cap` and are
+    discarded by mode="drop" — routing them to a real slot would clobber
+    the doc legitimately stored there.
+    """
+    n, md = codes.shape
     order = jnp.argsort(assign_, stable=True)
     sorted_cluster = assign_[order]
     # rank within cluster
-    same = (sorted_cluster[:, None] == jnp.arange(config.n_list)[None, :])
+    same = (sorted_cluster[:, None] == jnp.arange(n_list)[None, :])
     rank_in_cluster = jnp.cumsum(same, axis=0)[jnp.arange(n), sorted_cluster] - 1
-    # overflowing docs (rank >= cap) scatter to the out-of-bounds slot
-    # `cap` and are discarded by mode="drop" — routing them to a real slot
-    # would clobber the doc legitimately stored there
     slot = jnp.where(rank_in_cluster < cap, rank_in_cluster, cap)
 
-    bucket_codes = jnp.zeros((config.n_list, cap, md), codes.dtype)
-    bucket_mask = jnp.zeros((config.n_list, cap, md), bool)
-    bucket_valid = jnp.zeros((config.n_list, cap), bool)
-    bucket_ids = jnp.full((config.n_list, cap), -1, jnp.int32)
+    bucket_codes = jnp.zeros((n_list, cap, md), codes.dtype)
+    bucket_mask = jnp.zeros((n_list, cap, md), bool)
+    bucket_valid = jnp.zeros((n_list, cap), bool)
+    bucket_ids = jnp.full((n_list, cap), -1, jnp.int32)
 
     sc, sl = sorted_cluster, slot
     src = order
     bucket_codes = bucket_codes.at[sc, sl].set(codes[src], mode="drop")
     bucket_mask = bucket_mask.at[sc, sl].set(mask[src], mode="drop")
     bucket_valid = bucket_valid.at[sc, sl].set(True, mode="drop")
-    bucket_ids = bucket_ids.at[sc, sl].set(doc_ids[src], mode="drop")
-
-    return IVFIndex(cents, bucket_codes, bucket_mask, bucket_valid,
-                    bucket_ids, codebook)
+    bucket_ids = bucket_ids.at[sc, sl].set(doc_ids[src].astype(jnp.int32),
+                                           mode="drop")
+    return bucket_codes, bucket_mask, bucket_valid, bucket_ids
 
 
 def ivf_drop_rate(index: IVFIndex, n_docs: int) -> float:
@@ -326,3 +340,384 @@ def search_hamming_candidates(index: HammingIndex, q_codes: Array,
     return scan_mod.hamming_maxsim_topk(
         q_codes, q_mask, codes, mask, bits=bits, k=k,
         doc_ids=ids, valid=valid, scan=scan)
+
+
+# ---------------------------------------------------------------------------
+# Segmented LSM corpus store (live add/delete/update — docs/design.md §9)
+# ---------------------------------------------------------------------------
+#
+# A mutable index is an ordered list of immutable *segments* plus a
+# tombstone set. Segment 0 is the original build (wrapped as-is, zero
+# copy); every `add` appends one pow2-capacity-padded segment built with
+# the EXISTING codebook/centroids (no refit); `delete` flips live bits
+# (the structure is untouched — tombstoned docs score exactly NEG_INF via
+# the scan engine's valid-mask contract); `compact` gathers the live docs
+# into a fresh single segment. Search sweeps the segment list threading
+# the scan engine's (B, k) merge buffer across segments (`carry=`), which
+# is bit-identical to one sweep over the concatenated corpus.
+
+SEG_MIN_CAP = 8  # smallest append-segment capacity (pow2 shape bucketing)
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def segment_capacity(n: int) -> int:
+    """Capacity bucket for an n-doc segment: next pow2, floor SEG_MIN_CAP.
+
+    Pow2 bucketing bounds the set of distinct segment shapes (hence jit
+    signatures) at O(log N) across any mutation history, and lets the
+    serving layer pre-pad the registry so interleaved add/delete/query
+    never mints a recompile (serving/live.py).
+    """
+    return max(SEG_MIN_CAP, next_pow2(int(n)))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SegmentedState:
+    """Ordered immutable segments + per-slot live bits + id->position map.
+
+    segments: tuple of per-backend payloads (FlatIndex / FloatFlatIndex /
+        HammingIndex / IVFIndex / graph.HNSWIndex), each carrying its own
+        doc_ids; padding slots hold doc_id -1.
+    live: one bool array per segment, shaped like that segment's doc-id
+        array ((cap,) flat-likes, (n_list, cap) ivf). False = padding OR
+        tombstoned; a slot with doc_id >= 0 and live False is a tombstone.
+    pos_of_id: (id_cap,) int32 — the flattened slot position (row-major
+        across the segment list) of each doc id's unique LIVE occurrence,
+        -1 if the id is dead or unassigned. Invariant: every id has at
+        most one live slot (upserts tombstone the older occurrence), so
+        this map is total over live docs — it is how the per-query
+        candidate stages (cascade) resolve global ids to rows.
+    """
+
+    segments: Tuple[Any, ...]
+    live: Tuple[Array, ...]
+    pos_of_id: Array
+
+    def tree_flatten(self):
+        return ((self.segments, self.live, self.pos_of_id), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    # -- static geometry (python ints — never traced) ----------------------
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    def slot_counts(self) -> Tuple[int, ...]:
+        """Flattened slot count per segment (ivf: n_list * cap)."""
+        return tuple(int(np.prod(seg_doc_ids(p).shape))
+                     for p in self.segments)
+
+    def offsets(self) -> Tuple[int, ...]:
+        """Flattened start position of each segment."""
+        out, off = [], 0
+        for c in self.slot_counts():
+            out.append(off)
+            off += c
+        return tuple(out)
+
+    # -- host-side occupancy (sync) ----------------------------------------
+
+    def counts(self) -> Tuple[int, int]:
+        """(live_docs, tombstoned_docs) — host sync."""
+        live = tomb = 0
+        for payload, lv in zip(self.segments, self.live):
+            ids = np.asarray(seg_doc_ids(payload)).reshape(-1)
+            lvf = np.asarray(lv).reshape(-1)
+            filled = ids >= 0
+            live += int(np.sum(filled & lvf))
+            tomb += int(np.sum(filled & ~lvf))
+        return live, tomb
+
+
+def seg_doc_ids(payload) -> Array:
+    """The doc-id array of one segment payload (layout-specific name)."""
+    if isinstance(payload, IVFIndex):
+        return payload.bucket_doc_ids
+    return payload.doc_ids
+
+
+def rebuild_pos_of_id(segments: Tuple, live: Tuple, id_cap: int) -> Array:
+    """Recompute the id->flattened-position map from the segment list.
+
+    Host-side O(total slots); correct because each id has at most one
+    live slot (the SegmentedState invariant).
+    """
+    pos = np.full((int(id_cap),), -1, np.int32)
+    off = 0
+    for payload, lv in zip(segments, live):
+        ids = np.asarray(seg_doc_ids(payload)).reshape(-1).astype(np.int64)
+        lvf = np.asarray(lv).reshape(-1).astype(bool)
+        occ = np.flatnonzero(lvf & (ids >= 0))
+        pos[ids[occ]] = (off + occ).astype(np.int32)
+        off += ids.size
+    return jnp.asarray(pos)
+
+
+# -- segment construction ---------------------------------------------------
+
+def pad_dim0(arr: Array, cap: int, fill=0) -> Array:
+    """Pad dim 0 to `cap` rows with `fill` (no-op when already there)."""
+    n = arr.shape[0]
+    if n == cap:
+        return arr
+    pad = jnp.full((cap - n,) + arr.shape[1:], fill, arr.dtype)
+    return jnp.concatenate([arr, pad], axis=0)
+
+
+def make_flat_segment(codes: Array, mask: Array, codebook: Array,
+                      doc_ids: Array, cap: Optional[int] = None
+                      ) -> Tuple[FlatIndex, Array]:
+    """(FlatIndex, live) for an n-doc append, padded to a pow2 capacity."""
+    n = codes.shape[0]
+    cap = segment_capacity(n) if cap is None else cap
+    ix = FlatIndex(pad_dim0(codes, cap), pad_dim0(mask, cap, False),
+                   codebook,
+                   pad_dim0(doc_ids.astype(jnp.int32), cap, -1))
+    return ix, jnp.arange(cap) < n
+
+
+def make_float_flat_segment(embeddings: Array, mask: Array, doc_ids: Array,
+                            cap: Optional[int] = None
+                            ) -> Tuple[FloatFlatIndex, Array]:
+    n = embeddings.shape[0]
+    cap = segment_capacity(n) if cap is None else cap
+    ix = FloatFlatIndex(pad_dim0(embeddings, cap),
+                        pad_dim0(mask, cap, False),
+                        pad_dim0(doc_ids.astype(jnp.int32), cap, -1))
+    return ix, jnp.arange(cap) < n
+
+
+def make_hamming_segment(codes: Array, mask: Array, bits: int,
+                         doc_ids: Array, cap: Optional[int] = None
+                         ) -> Tuple[HammingIndex, Array]:
+    n = codes.shape[0]
+    cap = segment_capacity(n) if cap is None else cap
+    ix = HammingIndex(pad_dim0(codes.astype(jnp.uint16), cap),
+                      pad_dim0(mask, cap, False),
+                      pad_dim0(doc_ids.astype(jnp.int32), cap, -1),
+                      jnp.int32(bits))
+    return ix, jnp.arange(cap) < n
+
+
+def make_ivf_segment(codes: Array, mask: Array, codebook: Array,
+                     centroids: Array, doc_ids: Array,
+                     cap: Optional[int] = None) -> Tuple[IVFIndex, Array]:
+    """Bucket an append delta through EXISTING routing centroids.
+
+    No re-clustering: the new docs assign to the centroids the base
+    segment was built with, so a query's routing decision covers every
+    segment with one centroid matmul (`search_ivf_segmented`). The
+    default bucket cap is the realised max bucket load (host-computed),
+    so an append never drops docs; pass a fixed `cap` for shape-stable
+    serving appends.
+    """
+    doc_vec = doc_mean_vectors(codes, mask, codebook)
+    assign_ = quant.assign(doc_vec, centroids)
+    n_list = centroids.shape[0]
+    if cap is None:
+        counts = np.bincount(np.asarray(assign_), minlength=n_list)
+        cap = segment_capacity(int(counts.max()) if counts.size else 1)
+    bc, bm, bv, bi = _bucket_scatter(codes, mask,
+                                     doc_ids.astype(jnp.int32),
+                                     assign_, n_list, int(cap))
+    return IVFIndex(centroids, bc, bm, bv, bi, codebook), bv
+
+
+# -- segmented search (full sweep: merge buffer carried across segments) ----
+
+def _empty_topk(b: int, k: int, score_dtype) -> Tuple[Array, Array]:
+    return (jnp.full((b, k), scan_mod.score_sentinel(score_dtype),
+                     score_dtype),
+            jnp.full((b, k), -1, jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("k", "scan"))
+def search_flat_segmented(seg: SegmentedState, q: Array, q_mask: Array, *,
+                          k: int, scan: Optional[scan_mod.ScanConfig] = None
+                          ) -> Tuple[Array, Array]:
+    """ADC MaxSim over a segment list: one sweep per segment, one carried
+    (B, k) merge buffer. Tombstoned/padding slots (live False) score
+    exactly NEG_INF with id -1 (the valid-mask contract), so deletes are
+    honored without touching the stored codes."""
+    carry = None
+    for payload, live in zip(seg.segments, seg.live):
+        carry = scan_mod.quantized_maxsim_topk(
+            q, q_mask, payload.codes, payload.mask, payload.codebook, k=k,
+            doc_ids=payload.doc_ids, valid=live, scan=scan, carry=carry)
+    return carry if carry is not None else _empty_topk(q.shape[0], k,
+                                                       jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("k", "scan"))
+def search_float_flat_segmented(seg: SegmentedState, q: Array,
+                                q_mask: Array, *, k: int,
+                                scan: Optional[scan_mod.ScanConfig] = None
+                                ) -> Tuple[Array, Array]:
+    carry = None
+    for payload, live in zip(seg.segments, seg.live):
+        carry = scan_mod.maxsim_topk(
+            q, q_mask, payload.embeddings, payload.mask, k=k,
+            doc_ids=payload.doc_ids, valid=live, scan=scan, carry=carry)
+    return carry if carry is not None else _empty_topk(q.shape[0], k,
+                                                       jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("bits", "k", "scan"))
+def search_hamming_segmented(seg: SegmentedState, q_codes: Array,
+                             q_mask: Array, *, bits: int, k: int,
+                             scan: Optional[scan_mod.ScanConfig] = None
+                             ) -> Tuple[Array, Array]:
+    carry = None
+    for payload, live in zip(seg.segments, seg.live):
+        carry = scan_mod.hamming_maxsim_topk(
+            q_codes, q_mask, payload.codes, payload.mask, bits=bits, k=k,
+            doc_ids=payload.doc_ids, valid=live, scan=scan, carry=carry)
+    return carry if carry is not None else _empty_topk(q_codes.shape[0], k,
+                                                       jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("n_probe", "k", "scan"))
+def search_ivf_segmented(seg: SegmentedState, q: Array, q_mask: Array, *,
+                         n_probe: int, k: int,
+                         scan: Optional[scan_mod.ScanConfig] = None
+                         ) -> Tuple[Array, Array]:
+    """Route ONCE over the shared centroids, probe each segment's buckets.
+
+    Every segment shares the base segment's routing centroids (append
+    buckets through them — `make_ivf_segment`), so one centroid matmul
+    picks the probe set for the whole list; per-segment probed pools then
+    fold into one carried merge buffer.
+    """
+    b = q.shape[0]
+    cents = seg.segments[0].routing_centroids
+    q_vec = mean_pool(q, q_mask)
+    route = (2.0 * (q_vec @ cents.T)
+             - jnp.sum(cents ** 2, axis=-1)[None, :])
+    n_probe = min(n_probe, cents.shape[0])
+    _, probe = jax.lax.top_k(route, n_probe)  # noqa: JAX04 - clamped above
+
+    carry = None
+    for payload, live in zip(seg.segments, seg.live):
+        cand_codes = payload.bucket_codes[probe]  # (B, n_probe, cap, Md)
+        cand_mask = payload.bucket_mask[probe]
+        cand_valid = live[probe]                  # (B, n_probe, cap)
+        cand_ids = payload.bucket_doc_ids[probe]
+        cap, md = cand_codes.shape[2], cand_codes.shape[3]
+        carry = scan_mod.quantized_maxsim_topk(
+            q, q_mask,
+            cand_codes.reshape(b, n_probe * cap, md),
+            cand_mask.reshape(b, n_probe * cap, md),
+            payload.codebook, k=k,
+            doc_ids=cand_ids.reshape(b, n_probe * cap),
+            valid=cand_valid.reshape(b, n_probe * cap),
+            scan=scan, carry=carry)
+    return carry if carry is not None else _empty_topk(b, k, jnp.float32)
+
+
+# -- segmented candidate gather (the cascade's stage boundary) --------------
+
+def _gather_segmented(seg: SegmentedState, candidate_ids: Array,
+                      leaf_names: Tuple[str, ...]
+                      ) -> Tuple[Array, Array, Tuple[Array, ...]]:
+    """Resolve (B, P) global doc ids to rows across the segment list.
+
+    Unlike the monolithic `_gather_candidates` (positions == ids), the
+    segmented form routes through `pos_of_id`: dead/unknown ids resolve
+    to -1 and are never scored. Cost stays O(B * P * row) per segment —
+    one clamped gather + select per segment, never O(N).
+    """
+    id_cap = seg.pos_of_id.shape[0]
+    in_range = (candidate_ids >= 0) & (candidate_ids < id_cap)
+    safe_ids = jnp.clip(candidate_ids, 0, id_cap - 1)
+    pos = jnp.where(in_range, seg.pos_of_id[safe_ids], -1)    # (B, P)
+    valid = pos >= 0
+    outs = None
+    offset = 0
+    for payload in seg.segments:
+        size = int(np.prod(seg_doc_ids(payload).shape))
+        local = pos - offset
+        in_seg = valid & (local >= 0) & (local < size)
+        idx = jnp.clip(local, 0, size - 1)
+        gathered = []
+        for nm in leaf_names:
+            leaf = getattr(payload, nm)
+            g = leaf[idx]                                     # (B, P, ...)
+            sel = in_seg.reshape(in_seg.shape + (1,) * (g.ndim - 2))
+            gathered.append(jnp.where(sel, g, jnp.zeros_like(g)))
+        outs = gathered if outs is None else [
+            o | g if o.dtype == jnp.bool_ else o + g
+            for o, g in zip(outs, gathered)]
+        offset += size
+    ids = jnp.where(valid, candidate_ids, -1).astype(jnp.int32)
+    return ids, valid, tuple(outs)
+
+
+@partial(jax.jit, static_argnames=("k", "scan"))
+def search_flat_segmented_candidates(
+        seg: SegmentedState, q: Array, q_mask: Array, candidate_ids: Array,
+        *, k: int, scan: Optional[scan_mod.ScanConfig] = None
+        ) -> Tuple[Array, Array]:
+    """ADC MaxSim over a (B, P) global-id pool resolved via pos_of_id."""
+    ids, valid, (codes, mask) = _gather_segmented(
+        seg, candidate_ids, ("codes", "mask"))
+    return scan_mod.quantized_maxsim_topk(
+        q, q_mask, codes, mask, seg.segments[0].codebook, k=k,
+        doc_ids=ids, valid=valid, scan=scan)
+
+
+@partial(jax.jit, static_argnames=("k", "scan"))
+def search_float_flat_segmented_candidates(
+        seg: SegmentedState, q: Array, q_mask: Array, candidate_ids: Array,
+        *, k: int, scan: Optional[scan_mod.ScanConfig] = None
+        ) -> Tuple[Array, Array]:
+    ids, valid, (emb, mask) = _gather_segmented(
+        seg, candidate_ids, ("embeddings", "mask"))
+    return scan_mod.maxsim_topk(
+        q, q_mask, emb, mask, k=k, doc_ids=ids, valid=valid, scan=scan)
+
+
+@partial(jax.jit, static_argnames=("bits", "k", "scan"))
+def search_hamming_segmented_candidates(
+        seg: SegmentedState, q_codes: Array, q_mask: Array,
+        candidate_ids: Array, *, bits: int, k: int,
+        scan: Optional[scan_mod.ScanConfig] = None) -> Tuple[Array, Array]:
+    ids, valid, (codes, mask) = _gather_segmented(
+        seg, candidate_ids, ("codes", "mask"))
+    return scan_mod.hamming_maxsim_topk(
+        q_codes, q_mask, codes, mask, bits=bits, k=k,
+        doc_ids=ids, valid=valid, scan=scan)
+
+
+def gather_live_rows(seg: SegmentedState, leaf_names: Tuple[str, ...]
+                     ) -> Tuple[Tuple[Array, ...], Array]:
+    """Host-side gather of every live doc's rows in flattened slot order.
+
+    The compaction primitive: returns (leaves..., doc_ids) with exactly
+    the live docs, in the deterministic row-major order of the segment
+    list (ivf buckets flatten (n_list, cap) first). Padding and
+    tombstones are dropped.
+    """
+    outs = [[] for _ in leaf_names]
+    ids_out = []
+    for payload, lv in zip(seg.segments, seg.live):
+        ids = np.asarray(seg_doc_ids(payload)).reshape(-1)
+        lvf = np.asarray(lv).reshape(-1).astype(bool)
+        keep = np.flatnonzero(lvf & (ids >= 0))
+        slots = int(ids.size)
+        slot_ndim = len(np.shape(seg_doc_ids(payload)))
+        for o, nm in zip(outs, leaf_names):
+            leaf = np.asarray(getattr(payload, nm))
+            o.append(leaf.reshape((slots,) + leaf.shape[slot_ndim:])[keep])
+        ids_out.append(ids[keep])
+    leaves = tuple(jnp.asarray(np.concatenate(o, axis=0)) for o in outs)
+    return leaves, jnp.asarray(np.concatenate(ids_out).astype(np.int32))

@@ -110,15 +110,28 @@ def _kernel_tile(t: int, default: int) -> int:
 
 def _streaming_topk(score_block, payload: tuple, doc_ids: Array,
                     valid: Array, *, b: int, n: int, k: int, block_docs: int,
-                    per_query: bool, score_dtype) -> Tuple[Array, Array]:
+                    per_query: bool, score_dtype,
+                    carry: Optional[Tuple[Array, Array]] = None
+                    ) -> Tuple[Array, Array]:
     """lax.scan over doc blocks with a running (B, k) top-k merge buffer.
 
     score_block(*payload_block) -> (B, T) scores for one block; payload
     leaves have the doc axis at dim 1 (per_query) or dim 0 (shared).
+
+    `carry`, if given, seeds the merge buffer with a previous sweep's
+    (scores (B, k), ids (B, k)) — the cross-segment continuation used by
+    the segmented searches (core/index.py): sweeping segment s+1 with
+    segment s's buffer as carry is bit-identical to one sweep over the
+    concatenated corpus, because the carried buffer sits first in every
+    merge (ties resolve to the earlier segment, i.e. the lower global
+    position, exactly as one global lax.top_k would).
     """
     sent = score_sentinel(score_dtype)
-    init = (jnp.full((b, k), sent, score_dtype),
-            jnp.full((b, k), -1, jnp.int32))
+    if carry is not None:
+        init = (carry[0].astype(score_dtype), carry[1].astype(jnp.int32))
+    else:
+        init = (jnp.full((b, k), sent, score_dtype),
+                jnp.full((b, k), -1, jnp.int32))
     if n == 0:
         return init
     block = max(1, min(block_docs, n))
@@ -197,14 +210,17 @@ def quantized_maxsim_topk(q: Array, q_mask: Array, codes: Array,
                           d_mask: Array, codebook: Array, *, k: int,
                           doc_ids: Optional[Array] = None,
                           valid: Optional[Array] = None,
-                          scan: Optional[ScanConfig] = None
+                          scan: Optional[ScanConfig] = None,
+                          carry: Optional[Tuple[Array, Array]] = None
                           ) -> Tuple[Array, Array]:
     """Streaming fused ADC MaxSim top-k.
 
     q (B, Mq, D), q_mask (B, Mq) bool, codebook (K, D);
     codes/d_mask (N, Md) shared or (B, P, Md) per-query candidates.
     Optional doc_ids ((N,) or (B, P)) map scan positions to global ids;
-    optional valid ((N,) or (B, P)) marks real pool slots.
+    optional valid ((N,) or (B, P)) marks real pool slots; optional
+    carry seeds the merge buffer with a previous sweep's (B, k) result
+    (the cross-segment continuation — see _streaming_topk).
     -> (scores (B, k) f32, doc_ids (B, k) i32) per IndexBackend.search.
     """
     scan = scan if scan is not None else DEFAULT
@@ -246,7 +262,8 @@ def quantized_maxsim_topk(q: Array, q_mask: Array, codes: Array,
 
     return _streaming_topk(score_block, (codes, d_mask), doc_ids, valid,
                            b=b, n=n, k=k, block_docs=scan.block_docs,
-                           per_query=per_query, score_dtype=jnp.float32)
+                           per_query=per_query, score_dtype=jnp.float32,
+                           carry=carry)
 
 
 # ---------------------------------------------------------------------------
@@ -256,7 +273,9 @@ def quantized_maxsim_topk(q: Array, q_mask: Array, codes: Array,
 def maxsim_topk(q: Array, q_mask: Array, docs: Array, d_mask: Array, *,
                 k: int, doc_ids: Optional[Array] = None,
                 valid: Optional[Array] = None,
-                scan: Optional[ScanConfig] = None) -> Tuple[Array, Array]:
+                scan: Optional[ScanConfig] = None,
+                carry: Optional[Tuple[Array, Array]] = None
+                ) -> Tuple[Array, Array]:
     """Streaming float MaxSim top-k.
 
     docs/d_mask are either a shared (N, Md, D) corpus or (B, P, Md, D)
@@ -302,7 +321,8 @@ def maxsim_topk(q: Array, q_mask: Array, docs: Array, d_mask: Array, *,
 
     return _streaming_topk(score_block, (docs, d_mask), doc_ids, valid,
                            b=b, n=n, k=k, block_docs=scan.block_docs,
-                           per_query=per_query, score_dtype=jnp.float32)
+                           per_query=per_query, score_dtype=jnp.float32,
+                           carry=carry)
 
 
 # ---------------------------------------------------------------------------
@@ -313,7 +333,8 @@ def hamming_maxsim_topk(q_codes: Array, q_mask: Array, d_codes: Array,
                         d_mask: Array, *, bits: int, k: int,
                         doc_ids: Optional[Array] = None,
                         valid: Optional[Array] = None,
-                        scan: Optional[ScanConfig] = None
+                        scan: Optional[ScanConfig] = None,
+                        carry: Optional[Tuple[Array, Array]] = None
                         ) -> Tuple[Array, Array]:
     """Streaming binary MaxSim top-k.
 
@@ -370,4 +391,5 @@ def hamming_maxsim_topk(q_codes: Array, q_mask: Array, d_codes: Array,
 
     return _streaming_topk(score_block, (d_codes, d_mask), doc_ids, valid,
                            b=b, n=n, k=k, block_docs=scan.block_docs,
-                           per_query=per_query, score_dtype=jnp.int32)
+                           per_query=per_query, score_dtype=jnp.int32,
+                           carry=carry)

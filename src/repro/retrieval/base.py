@@ -31,6 +31,7 @@ See docs/api.md for the full contract.
 """
 from __future__ import annotations
 
+import dataclasses
 import inspect
 import warnings
 from typing import Any, Dict, NamedTuple, Optional, Tuple
@@ -45,6 +46,13 @@ from repro.core import quantization as quant
 from repro.retrieval.config import HPCConfig
 
 Array = jax.Array
+
+# On-disk npz manifest version (IndexBackend.save/load). History:
+#   1 — monolithic states, no version key (PR 4; absence of the key
+#       identifies a v1 file, which still loads)
+#   2 — adds `format_version` + the `segments` count for segmented
+#       LSM states (this version reads v1 files unchanged)
+FORMAT_VERSION = 2
 
 
 def code_dtype(k: int):
@@ -269,6 +277,28 @@ def encode_corpus(key: Array, corpus: Corpus, cfg: HPCConfig, mesh=None
     return k_struct, codebook, codes_full, codes, mask
 
 
+def encode_delta(codebook: Array, delta: Corpus, cfg: HPCConfig
+                 ) -> Tuple[Array, Array, Array]:
+    """Encode a corpus delta against an EXISTING codebook (no refit).
+
+    The online counterpart of `encode_corpus`: quantizes the delta's
+    patches with the codebook the index was built with and applies the
+    same doc-side pruning policy, so an appended segment is scored on
+    exactly the representation a from-scratch build would give those
+    docs. Returns (codes_full, codes, mask) — full codes feed the rerank
+    rows, pruned codes/mask feed the primary structure.
+    """
+    k = codebook.shape[0]
+    codes_full = quant.quantize(delta.embeddings, codebook,
+                                code_dtype=code_dtype(k))
+    if cfg.prune_side in ("doc", "both"):
+        codes, _, mask, _ = pruning.prune_topp_codes(
+            codes_full, delta.salience, delta.mask, p=cfg.p)
+    else:
+        codes, mask = codes_full, delta.mask
+    return codes_full, codes, mask
+
+
 # ---------------------------------------------------------------------------
 # Backend base class
 # ---------------------------------------------------------------------------
@@ -337,8 +367,281 @@ class IndexBackend:
             "search (search_candidates); use flat/float_flat/hamming as "
             "cascade stages")
 
+    # -- mutation (segmented LSM store — docs/design.md §9) ------------------
+    #
+    # A built state starts monolithic (bit-identical to the pre-mutation
+    # format); the first `add`/`delete` normalizes it into a
+    # `SegmentedState` — segment 0 wraps the existing structure zero-copy.
+    # `add` appends one immutable pow2-capacity segment encoded with the
+    # EXISTING codebook; `delete` flips live bits (tombstones honored by
+    # every search path via the valid-mask contract); `compact` gathers
+    # the live docs back into a single segment. Rerank rows are indexed
+    # by GLOBAL doc id throughout, so the facade's rerank never changes.
+
+    def _segmented(self, state: RetrieverState
+                   ) -> Optional[index_mod.SegmentedState]:
+        """The state's SegmentedState, or None while still monolithic."""
+        s = state.backend_state
+        if isinstance(s, index_mod.SegmentedState):
+            return s
+        if self._is_wrapper(s) and isinstance(s.index,
+                                              index_mod.SegmentedState):
+            return s.index
+        return None
+
+    @staticmethod
+    def _is_wrapper(s) -> bool:
+        """Aux-carrying wrapper state (IVFState/HammingState/HNSWState)?
+
+        NamedTuple payloads (FlatIndex, ...) also `hasattr(s, "index")` —
+        the tuple method — so require a dataclass with an `index` field.
+        """
+        return (dataclasses.is_dataclass(s)
+                and not isinstance(s, index_mod.SegmentedState)
+                and any(f.name == "index" for f in dataclasses.fields(s)))
+
+    def _set_segmented(self, state: RetrieverState,
+                       seg: index_mod.SegmentedState) -> RetrieverState:
+        s = state.backend_state
+        if self._is_wrapper(s):
+            return state._replace(
+                backend_state=dataclasses.replace(s, index=seg))
+        return state._replace(backend_state=seg)
+
+    def _wrap_segment(self, state: RetrieverState
+                      ) -> Tuple[Any, Array]:
+        """(payload, live) wrapping the monolithic structure zero-copy."""
+        s = state.backend_state
+        payload = s.index if self._is_wrapper(s) else s
+        return payload, index_mod.seg_doc_ids(payload) >= 0
+
+    def _grow_rerank(self, state: RetrieverState, id_cap: int
+                     ) -> RetrieverState:
+        if state.rerank_codes.shape[0] >= id_cap:
+            return state
+        return state._replace(
+            rerank_codes=index_mod.pad_dim0(state.rerank_codes, id_cap, 0),
+            rerank_mask=index_mod.pad_dim0(state.rerank_mask, id_cap, False))
+
+    def to_segmented(self, state: RetrieverState, *,
+                     id_cap: Optional[int] = None) -> RetrieverState:
+        """Normalize a monolithic state into single-segment form (no-op if
+        already segmented). Search results are bit-identical either way —
+        segment 0 IS the original structure."""
+        if self._segmented(state) is not None:
+            return state
+        payload, live = self._wrap_segment(state)
+        if id_cap is None:
+            ids = np.asarray(index_mod.seg_doc_ids(payload)).reshape(-1)
+            id_cap = index_mod.segment_capacity(int(ids.max(initial=-1)) + 1)
+        seg = index_mod.SegmentedState(
+            (payload,), (live,),
+            index_mod.rebuild_pos_of_id((payload,), (live,), id_cap))
+        return self._grow_rerank(self._set_segmented(state, seg), id_cap)
+
+    # per-backend append hooks -------------------------------------------
+
+    def _encode_delta(self, state: RetrieverState, delta: Corpus,
+                      cfg: HPCConfig) -> Tuple[Array, Array, Array]:
+        """(full_repr, payload_repr, payload_mask) for a delta."""
+        return encode_delta(state.codebook, delta, cfg)
+
+    def _delta_segment(self, state: RetrieverState,
+                       seg: index_mod.SegmentedState, enc, delta: Corpus,
+                       cfg: HPCConfig, doc_ids: Array) -> Tuple[Any, Array]:
+        """(payload, live) for an append segment — backend-specific."""
+        raise NotImplementedError(
+            f"backend {self.name!r} does not support add()")
+
+    def _append_segment(self, state: RetrieverState,
+                        seg: index_mod.SegmentedState, enc, delta: Corpus,
+                        cfg: HPCConfig, doc_ids: Array
+                        ) -> index_mod.SegmentedState:
+        """Default: one more immutable segment. `hnsw` overrides to grow
+        its single graph segment in place (incremental insert)."""
+        payload, live = self._delta_segment(state, seg, enc, delta, cfg,
+                                            doc_ids)
+        return index_mod.SegmentedState(
+            seg.segments + (payload,), seg.live + (live,), seg.pos_of_id)
+
+    def _rerank_delta_rows(self, enc, delta: Corpus) -> Tuple[Array, Array]:
+        """Rows written into the id-indexed rerank corpus for a delta."""
+        return enc[0], delta.mask
+
+    # public mutation API -------------------------------------------------
+
+    def add(self, state: RetrieverState, delta: Corpus, cfg: HPCConfig, *,
+            doc_ids=None) -> RetrieverState:
+        """Append (or upsert) documents without rebuilding. Returns the
+        new state; `state` is unchanged (segments are immutable).
+
+        doc_ids None assigns fresh ids past the largest ever used.
+        Explicit ids may reuse existing ones: a live prior occurrence is
+        tombstoned (upsert — the newest segment wins), a dead one stays
+        dead. Duplicate ids within one delta are rejected. The delta must
+        have the same patch count (Md) and embedding dim as the corpus
+        the index was built on.
+        """
+        n_new = int(delta.embeddings.shape[0])
+        if n_new == 0:
+            return state
+        state = self.to_segmented(state)
+        seg = self._segmented(state)
+
+        # resolve ids (host side)
+        max_assigned = -1
+        for payload in seg.segments:
+            s_ids = np.asarray(index_mod.seg_doc_ids(payload))
+            if s_ids.size:
+                max_assigned = max(max_assigned, int(s_ids.max()))
+        if doc_ids is None:
+            ids_np = np.arange(max_assigned + 1, max_assigned + 1 + n_new,
+                               dtype=np.int64)
+        else:
+            ids_np = np.asarray(jax.device_get(doc_ids),
+                                np.int64).reshape(-1)
+            if ids_np.shape[0] != n_new:
+                raise ValueError(
+                    f"doc_ids has {ids_np.shape[0]} entries for a "
+                    f"{n_new}-doc delta")
+            if (ids_np < 0).any():
+                raise ValueError("doc_ids must be non-negative")
+            if np.unique(ids_np).size != n_new:
+                raise ValueError(
+                    "duplicate doc_ids within one add() delta; split the "
+                    "delta so each id appears once (newest-wins upserts "
+                    "need a segment boundary between occurrences)")
+        ids_j = jnp.asarray(ids_np, jnp.int32)
+
+        # prior live occurrences of reused ids -> flattened positions now
+        # (positions of existing rows are stable under append)
+        pos_np = np.asarray(seg.pos_of_id)
+        in_cap = ids_np < pos_np.shape[0]
+        old_pos = np.where(in_cap, pos_np[np.minimum(
+            ids_np, pos_np.shape[0] - 1)], -1)
+        kill_pos = old_pos[old_pos >= 0]
+
+        enc = self._encode_delta(state, delta, cfg)
+        seg2 = self._append_segment(state, seg, enc, delta, cfg, ids_j)
+
+        if kill_pos.size:  # upsert: tombstone the prior occurrence
+            new_live, off = [], 0
+            for payload, lv in zip(seg2.segments, seg2.live):
+                size = int(np.prod(np.shape(
+                    index_mod.seg_doc_ids(payload))))
+                sel = kill_pos[(kill_pos >= off) & (kill_pos < off + size)]
+                if sel.size:
+                    lv_np = np.asarray(lv).reshape(-1).copy()
+                    lv_np[sel - off] = False
+                    new_live.append(jnp.asarray(
+                        lv_np.reshape(np.shape(lv))))
+                else:
+                    new_live.append(lv)
+                off += size
+            seg2 = index_mod.SegmentedState(seg2.segments, tuple(new_live),
+                                            seg2.pos_of_id)
+
+        id_cap = index_mod.segment_capacity(
+            max(pos_np.shape[0], int(ids_np.max()) + 1))
+        seg2 = index_mod.SegmentedState(
+            seg2.segments, seg2.live,
+            index_mod.rebuild_pos_of_id(seg2.segments, seg2.live, id_cap))
+        state = self._grow_rerank(self._set_segmented(state, seg2), id_cap)
+        rc_rows, rm_rows = self._rerank_delta_rows(enc, delta)
+        return state._replace(
+            rerank_codes=state.rerank_codes.at[ids_j].set(
+                rc_rows.astype(state.rerank_codes.dtype)),
+            rerank_mask=state.rerank_mask.at[ids_j].set(
+                rm_rows.astype(state.rerank_mask.dtype)))
+
+    def delete(self, state: RetrieverState, doc_ids) -> RetrieverState:
+        """Tombstone documents by global id. O(total slots) host work, no
+        device recompute: searches mask the docs out via the valid-mask
+        contract (scores exactly NEG_INF, ids -1). Unknown or already-
+        dead ids are a no-op."""
+        state = self.to_segmented(state)
+        seg = self._segmented(state)
+        kill = np.unique(np.asarray(jax.device_get(doc_ids),
+                                    np.int64).reshape(-1))
+        kill = kill[kill >= 0]
+        new_live, changed = [], False
+        for payload, lv in zip(seg.segments, seg.live):
+            s_ids = np.asarray(index_mod.seg_doc_ids(payload))
+            lv_np = np.asarray(lv)
+            hit = np.isin(s_ids, kill) & lv_np
+            if hit.any():
+                changed = True
+                new_live.append(jnp.asarray(lv_np & ~hit))
+            else:
+                new_live.append(lv)
+        if not changed:
+            return state
+        seg2 = index_mod.SegmentedState(
+            seg.segments, tuple(new_live),
+            index_mod.rebuild_pos_of_id(seg.segments, tuple(new_live),
+                                        seg.pos_of_id.shape[0]))
+        return self._set_segmented(state, seg2)
+
+    def _compact_payload(self, state: RetrieverState,
+                         seg: index_mod.SegmentedState, cfg: HPCConfig
+                         ) -> Tuple[Any, Array]:
+        """(payload, live) holding exactly the live docs — per backend."""
+        raise NotImplementedError(
+            f"backend {self.name!r} does not support compact()")
+
+    def compact(self, state: RetrieverState, cfg: HPCConfig
+                ) -> RetrieverState:
+        """Physically drop tombstones: gather the live docs into a single
+        fresh segment (ivf re-buckets through its existing centroids,
+        hnsw re-inserts live nodes with their stored level draws). Doc
+        ids and the id-indexed rerank rows are preserved, so search
+        results over the live corpus are unchanged at full budgets."""
+        state = self.to_segmented(state)
+        seg = self._segmented(state)
+        payload, live = self._compact_payload(state, seg, cfg)
+        seg2 = index_mod.SegmentedState(
+            (payload,), (live,),
+            index_mod.rebuild_pos_of_id((payload,), (live,),
+                                        seg.pos_of_id.shape[0]))
+        return self._set_segmented(state, seg2)
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         raise NotImplementedError
+
+    # -- segmented accounting helpers ---------------------------------------
+
+    def _seg_payload_bytes(self, payload, n_live: int) -> int:
+        """Payload bytes attributable to `n_live` live docs of a segment."""
+        raise NotImplementedError
+
+    def _segmented_storage(self, state: RetrieverState,
+                           seg: index_mod.SegmentedState) -> Dict[str, int]:
+        """Live-docs-only payload accounting + per-segment breakdown.
+
+        Tombstoned docs stop counting toward `payload` the moment they
+        are deleted (satellite contract) — physical bytes are only freed
+        at compact, but the storage *metric* tracks the live corpus.
+        """
+        out: Dict[str, int] = {}
+        total = 0
+        for i, (payload, lv) in enumerate(zip(seg.segments, seg.live)):
+            ids = np.asarray(index_mod.seg_doc_ids(payload)).reshape(-1)
+            n_live = int(np.sum(np.asarray(lv).reshape(-1) & (ids >= 0)))
+            b = self._seg_payload_bytes(payload, n_live)
+            out[f"segment_{i}_payload"] = b
+            total += b
+        out["payload"] = total
+        cb = state.codebook
+        out["codebook"] = cb.size * cb.dtype.itemsize
+        return out
+
+    def _segment_stats(self, seg: index_mod.SegmentedState
+                       ) -> Dict[str, float]:
+        live, tomb = seg.counts()
+        return {"segments": float(seg.n_segments),
+                "live_docs": float(live),
+                "tombstoned_docs": float(tomb),
+                "tombstone_frac": tomb / max(live + tomb, 1)}
 
     # -- diagnostics --------------------------------------------------------
 
@@ -346,9 +649,13 @@ class IndexBackend:
         """Structure-quality stats of a built index (may sync to host).
 
         Backends override to expose what their build dropped or skewed
-        (e.g. `ivf` reports its bucket-overflow drop rate). Default: {}.
+        (e.g. `ivf` reports its bucket-overflow drop rate). Default: {}
+        for monolithic states; segmented states report the segment
+        lifecycle counters (segments / live_docs / tombstoned_docs /
+        tombstone_frac) — overriders should merge `_segment_stats` in.
         """
-        return {}
+        seg = self._segmented(state)
+        return self._segment_stats(seg) if seg is not None else {}
 
     def abstract_state(self, *, n: int, md: int = 16, d: int = 16,
                        k: int = 256, **knobs) -> RetrieverState:
@@ -374,12 +681,22 @@ class IndexBackend:
         Default: shard dim 0 of every backend-state array over the
         "corpus" logical axis (documents/buckets over the mesh), keep the
         codebook replicated, shard the rerank corpus over "corpus" too.
-        Backends with non-corpus leading dims override this.
+        Backends with non-corpus leading dims override this. Segmented
+        states shard per segment (each segment's dim 0 spreads over the
+        mesh independently); the id->position map replicates — every
+        shard resolves global ids locally.
         """
         def leaf_spec(leaf):
             nd = jnp.ndim(leaf)
             return ("corpus",) + (None,) * (nd - 1) if nd else ()
         backend_specs = jax.tree.map(leaf_spec, state.backend_state)
+        if self._segmented(state) is not None:
+            def fix(sp):
+                return dataclasses.replace(sp, pos_of_id=(None,))
+            backend_specs = (
+                dataclasses.replace(backend_specs, index=fix(
+                    backend_specs.index))
+                if self._is_wrapper(backend_specs) else fix(backend_specs))
         return RetrieverState(
             codebook=(None, None),
             backend_state=backend_specs,
@@ -398,18 +715,36 @@ class IndexBackend:
         """Static aux carried by the backend state (None if stateless)."""
         return None
 
-    def state_template(self, aux) -> RetrieverState:
+    def state_template(self, aux, n_segments: int = 0) -> RetrieverState:
         """Dummy-leaf state with this backend's exact pytree structure.
 
-        Backends with custom state must override this (or save/load)."""
+        `n_segments` 0 is the monolithic layout; > 0 is a SegmentedState
+        with that many segments. Backends with custom state must override
+        this (or save/load)."""
         raise NotImplementedError(
             f"backend {self.name!r} must define state_template (or override "
             "save/load) for persistence")
 
+    def _n_segments(self, state: RetrieverState) -> int:
+        seg = self._segmented(state)
+        return seg.n_segments if seg is not None else 0
+
+    def _template(self, aux, n_segments: int) -> RetrieverState:
+        """state_template with a graceful path for legacy overrides that
+        predate the n_segments parameter (monolithic-only backends)."""
+        try:
+            return self.state_template(aux, n_segments=n_segments)
+        except TypeError:
+            if n_segments:
+                raise
+            return self.state_template(aux)
+
     def save(self, path: str, state: RetrieverState) -> str:
         aux = self._state_aux(state)
+        n_seg = self._n_segments(state)
         leaves, treedef = jax.tree_util.tree_flatten(state)
-        template_def = jax.tree_util.tree_structure(self.state_template(aux))
+        template_def = jax.tree_util.tree_structure(
+            self._template(aux, n_seg))
         if treedef != template_def:
             raise NotImplementedError(
                 f"backend {self.name!r}: state structure {treedef} does not "
@@ -417,6 +752,9 @@ class IndexBackend:
         payload = {f"leaf_{i:04d}": np.asarray(leaf)
                    for i, leaf in enumerate(leaves)}
         payload["backend"] = np.array(self.name)
+        payload["format_version"] = np.asarray(FORMAT_VERSION, np.int64)
+        if n_seg:
+            payload["segments"] = np.asarray(n_seg, np.int64)
         if aux is not None:
             payload["aux"] = np.asarray(aux, np.int64)
         if not path.endswith(".npz"):
@@ -428,10 +766,26 @@ class IndexBackend:
         if not path.endswith(".npz"):
             path = path + ".npz"
         with np.load(path, allow_pickle=False) as z:
+            if "backend" not in z.files:
+                raise ValueError(
+                    f"{path!r} is not a retriever index file (no 'backend' "
+                    "key); it may predate the v1 retriever format — rebuild "
+                    "the index with this version")
             saved = str(z["backend"])
             if saved != self.name:
                 raise ValueError(
                     f"index was saved by backend {saved!r}, not {self.name!r}")
+            # absence of the key marks a format-v1 file (still readable);
+            # files from the future fail with a clear message instead of
+            # an opaque structure mismatch
+            version = (int(z["format_version"])
+                       if "format_version" in z.files else 1)
+            if version > FORMAT_VERSION:
+                raise ValueError(
+                    f"index file {path!r} has format version {version}; "
+                    f"this build reads versions <= {FORMAT_VERSION} — "
+                    "upgrade to load it, or re-save with this version")
+            n_seg = int(z["segments"]) if "segments" in z.files else 0
             if "aux" in z.files:
                 a = z["aux"]
                 aux = int(a) if a.ndim == 0 else tuple(int(x) for x in a)
@@ -439,7 +793,7 @@ class IndexBackend:
                 aux = None
             names = sorted(n for n in z.files if n.startswith("leaf_"))
             leaves = [jnp.asarray(z[n]) for n in names]
-        treedef = jax.tree_util.tree_structure(self.state_template(aux))
+        treedef = jax.tree_util.tree_structure(self._template(aux, n_seg))
         if treedef.num_leaves != len(leaves):
             raise ValueError(
                 f"index file has {len(leaves)} arrays, backend {self.name!r} "

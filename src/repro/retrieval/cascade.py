@@ -29,6 +29,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import binary as binary_mod
 from repro.core import index as index_mod
@@ -125,6 +126,75 @@ class CascadeBackend(IndexBackend):
                                            scan=scan)
         return ff_b.search_candidates(ff_v, query, ids2, k=k, scan=scan)
 
+    # -- mutation (member-wise composition) ---------------------------------
+
+    def _segmented(self, state: RetrieverState):
+        # CascadeState is not an `index`-field wrapper; the flat member's
+        # SegmentedState stands in for segment accounting (all members
+        # mutate in lockstep, so their segment/tombstone structure agrees)
+        flat_member = state.backend_state.members[1]
+        if isinstance(flat_member, index_mod.SegmentedState):
+            return flat_member
+        return None
+
+    def _recompose(self, state: RetrieverState, member_states,
+                   rerank_from: int) -> RetrieverState:
+        """Reassemble the outer state from mutated member views.
+
+        Rerank leaves come from the member at `rerank_from` (the flat
+        stage — float_flat writes placeholder rows that must not clobber
+        the shared full-code rerank corpus)."""
+        s = state.backend_state
+        donor = member_states[rerank_from]
+        return state._replace(
+            backend_state=CascadeState(
+                tuple(ms.backend_state for ms in member_states), s.p1, s.p2),
+            rerank_codes=donor.rerank_codes,
+            rerank_mask=donor.rerank_mask)
+
+    def to_segmented(self, state: RetrieverState, *,
+                     id_cap=None) -> RetrieverState:
+        if self._segmented(state) is not None:
+            return state
+        if id_cap is None:
+            ids = np.asarray(state.backend_state.members[1].doc_ids)
+            id_cap = index_mod.segment_capacity(int(ids.max(initial=-1)) + 1)
+        outs = [backend.to_segmented(view, id_cap=id_cap)
+                for backend, view in self._views(state)]
+        return self._recompose(state, outs, rerank_from=1)
+
+    def add(self, state: RetrieverState, delta: Corpus, cfg: HPCConfig, *,
+            doc_ids=None) -> RetrieverState:
+        n_new = int(delta.embeddings.shape[0])
+        if n_new == 0:
+            return state
+        state = self.to_segmented(state)
+        if doc_ids is None:
+            # resolve fresh ids once so every member assigns identically
+            seg = self._segmented(state)
+            max_id = -1
+            for payload in seg.segments:
+                ids = np.asarray(index_mod.seg_doc_ids(payload)).reshape(-1)
+                max_id = max(max_id, int(ids.max(initial=-1)))
+            doc_ids = np.arange(max_id + 1, max_id + 1 + n_new,
+                                dtype=np.int64)
+        outs = [backend.add(view, delta, cfg, doc_ids=doc_ids)
+                for backend, view in self._views(state)]
+        return self._recompose(state, outs, rerank_from=1)
+
+    def delete(self, state: RetrieverState, doc_ids) -> RetrieverState:
+        state = self.to_segmented(state)
+        outs = [backend.delete(view, doc_ids)
+                for backend, view in self._views(state)]
+        return self._recompose(state, outs, rerank_from=1)
+
+    def compact(self, state: RetrieverState,
+                cfg: HPCConfig) -> RetrieverState:
+        state = self.to_segmented(state)
+        outs = [backend.compact(view, cfg)
+                for backend, view in self._views(state)]
+        return self._recompose(state, outs, rerank_from=1)
+
     # -- accounting ---------------------------------------------------------
 
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
@@ -143,6 +213,9 @@ class CascadeBackend(IndexBackend):
     def build_stats(self, state: RetrieverState) -> Dict[str, float]:
         s = state.backend_state
         stats = {"p1": float(s.p1), "p2": float(s.p2)}
+        seg = self._segmented(state)
+        if seg is not None:
+            stats.update(self._segment_stats(seg))
         for name, (backend, view) in zip(STAGES, self._views(state)):
             for key, val in backend.build_stats(view).items():
                 stats[f"{name}_{key}"] = val
@@ -154,12 +227,21 @@ class CascadeBackend(IndexBackend):
         bits = knobs.get("bits", binary_mod.bits_for_k(k))
         p1 = knobs.get("p1", 1024)
         p2 = knobs.get("p2", 64)
+        segments = knobs.get("segments")
+        id_cap = None
+        if segments is not None:
+            id_cap = knobs.get("id_cap",
+                               index_mod.segment_capacity(sum(segments)))
         members = []
         for name in STAGES:
             stage_knobs = {"bits": bits} if name == "hamming" else {}
+            if segments is not None:
+                stage_knobs.update(segments=segments, id_cap=id_cap)
             ab = get_backend(name).abstract_state(n=n, md=md, d=d, k=k,
                                                   **stage_knobs)
             members.append(ab.backend_state)
+        if id_cap is not None:
+            n = id_cap
         sds, cdt = jax.ShapeDtypeStruct, code_dtype(k)
         return RetrieverState(
             codebook=sds((k, d), jnp.float32),
@@ -187,11 +269,11 @@ class CascadeBackend(IndexBackend):
         s = state.backend_state
         return (s.p1, s.p2, s.members[0].bits)
 
-    def state_template(self, aux) -> RetrieverState:
+    def state_template(self, aux, n_segments: int = 0) -> RetrieverState:
         p1, p2, bits = aux
-        members = (
-            HammingState(index_mod.HammingIndex(0, 0, 0, 0), bits),
-            index_mod.FlatIndex(0, 0, 0, 0),
-            index_mod.FloatFlatIndex(0, 0, 0),
-        )
+        member_aux = {"hamming": bits, "flat": None, "float_flat": None}
+        members = tuple(
+            get_backend(name).state_template(
+                member_aux[name], n_segments=n_segments).backend_state
+            for name in STAGES)
         return RetrieverState(0, CascadeState(members, p1, p2), 0, 0)

@@ -40,6 +40,10 @@ class FloatFlatBackend(IndexBackend):
 
     def search(self, state: RetrieverState, query: Query, *, k: int,
                scan=None) -> Tuple[Array, Array]:
+        seg = self._segmented(state)
+        if seg is not None:
+            return index_mod.search_float_flat_segmented(
+                seg, query.embeddings, query.mask, k=k, scan=scan)
         return index_mod.search_float_flat(
             state.backend_state, query.embeddings, query.mask, k=k,
             scan=scan)
@@ -49,26 +53,86 @@ class FloatFlatBackend(IndexBackend):
                           scan=None) -> Tuple[Array, Array]:
         if candidate_ids is None:
             return self.search(state, query, k=k, scan=scan)
+        seg = self._segmented(state)
+        if seg is not None:
+            return index_mod.search_float_flat_segmented_candidates(
+                seg, query.embeddings, query.mask, candidate_ids, k=k,
+                scan=scan)
         return index_mod.search_float_flat_candidates(
             state.backend_state, query.embeddings, query.mask,
             candidate_ids, k=k, scan=scan)
 
+    # -- mutation hooks ------------------------------------------------------
+
+    def _encode_delta(self, state, delta, cfg):
+        # no codebook: the payload is the (doc-pruned) float embeddings
+        emb, mask = delta.embeddings, delta.mask
+        if cfg.prune_side in ("doc", "both"):
+            pr = pruning.prune_topp(emb, delta.salience, mask, p=cfg.p)
+            emb, mask = pr.embeddings, pr.mask
+        return emb, emb, mask
+
+    def _delta_segment(self, state, seg, enc, delta, cfg, doc_ids):
+        _, emb, mask = enc
+        return index_mod.make_float_flat_segment(emb, mask, doc_ids)
+
+    def _rerank_delta_rows(self, enc, delta):
+        # exact_scores backend: the facade never reranks — keep the dummy
+        # placeholder rows the build writes
+        n = delta.embeddings.shape[0]
+        return jnp.zeros((n, 1), jnp.uint8), jnp.zeros((n, 1), bool)
+
+    def _compact_payload(self, state, seg, cfg):
+        (emb, mask), ids = index_mod.gather_live_rows(
+            seg, ("embeddings", "mask"))
+        return index_mod.make_float_flat_segment(emb, mask, ids)
+
+    def _seg_payload_bytes(self, payload, n_live: int) -> int:
+        e = payload.embeddings
+        return n_live * e.shape[-2] * e.shape[-1] * e.dtype.itemsize
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
+        seg = self._segmented(state)
+        if seg is not None:
+            out = self._segmented_storage(state, seg)
+            out.pop("codebook", None)    # dummy (1, d) placeholder
+            return out
         e = state.backend_state.embeddings
         return {"payload": e.size * e.dtype.itemsize}
 
     def abstract_state(self, *, n: int, md: int = 16, d: int = 16,
                        k: int = 256, **knobs) -> RetrieverState:
         sds = jax.ShapeDtypeStruct
-        ix = index_mod.FloatFlatIndex(
-            embeddings=sds((n, md, d), jnp.float32),
-            mask=sds((n, md), jnp.bool_),
-            doc_ids=sds((n,), jnp.int32))
+
+        def seg_payload(cap):
+            return index_mod.FloatFlatIndex(
+                embeddings=sds((cap, md, d), jnp.float32),
+                mask=sds((cap, md), jnp.bool_),
+                doc_ids=sds((cap,), jnp.int32))
+
+        segments = knobs.get("segments")
+        if segments is not None:
+            id_cap = knobs.get("id_cap",
+                               index_mod.segment_capacity(sum(segments)))
+            bs = index_mod.SegmentedState(
+                tuple(seg_payload(c) for c in segments),
+                tuple(sds((c,), jnp.bool_) for c in segments),
+                sds((id_cap,), jnp.int32))
+            n = id_cap
+        else:
+            bs = seg_payload(n)
         return RetrieverState(
             codebook=sds((1, d), jnp.float32),
-            backend_state=ix,
+            backend_state=bs,
             rerank_codes=sds((n, 1), jnp.uint8),
             rerank_mask=sds((n, 1), jnp.bool_))
 
-    def state_template(self, aux) -> RetrieverState:
-        return RetrieverState(0, index_mod.FloatFlatIndex(0, 0, 0), 0, 0)
+    def state_template(self, aux, n_segments: int = 0) -> RetrieverState:
+        if n_segments:
+            bs = index_mod.SegmentedState(
+                tuple(index_mod.FloatFlatIndex(0, 0, 0)
+                      for _ in range(n_segments)),
+                (0,) * n_segments, 0)
+        else:
+            bs = index_mod.FloatFlatIndex(0, 0, 0)
+        return RetrieverState(0, bs, 0, 0)

@@ -53,11 +53,19 @@ class HammingBackend(IndexBackend):
             rerank_codes=codes_full,
             rerank_mask=corpus.mask)
 
+    def _q_codes(self, state: RetrieverState, query: Query) -> Array:
+        return quant.quantize(query.embeddings, state.codebook,
+                              code_dtype=code_dtype(
+                                  1 << state.backend_state.bits))
+
     def search(self, state: RetrieverState, query: Query, *, k: int,
                scan=None) -> Tuple[Array, Array]:
         s = state.backend_state
-        q_codes = quant.quantize(query.embeddings, state.codebook,
-                                 code_dtype=code_dtype(1 << s.bits))
+        q_codes = self._q_codes(state, query)
+        seg = self._segmented(state)
+        if seg is not None:
+            return index_mod.search_hamming_segmented(
+                seg, q_codes, query.mask, bits=s.bits, k=k, scan=scan)
         return index_mod.search_hamming(s.index, q_codes, query.mask,
                                         bits=s.bits, k=k, scan=scan)
 
@@ -67,14 +75,39 @@ class HammingBackend(IndexBackend):
         if candidate_ids is None:
             return self.search(state, query, k=k, scan=scan)
         s = state.backend_state
-        q_codes = quant.quantize(query.embeddings, state.codebook,
-                                 code_dtype=code_dtype(1 << s.bits))
+        q_codes = self._q_codes(state, query)
+        seg = self._segmented(state)
+        if seg is not None:
+            return index_mod.search_hamming_segmented_candidates(
+                seg, q_codes, query.mask, candidate_ids,
+                bits=s.bits, k=k, scan=scan)
         return index_mod.search_hamming_candidates(
             s.index, q_codes, query.mask, candidate_ids,
             bits=s.bits, k=k, scan=scan)
 
+    # -- mutation hooks ------------------------------------------------------
+
+    def _delta_segment(self, state, seg, enc, delta, cfg, doc_ids):
+        _, codes, mask = enc
+        return index_mod.make_hamming_segment(
+            codes, mask, state.backend_state.bits, doc_ids)
+
+    def _compact_payload(self, state, seg, cfg):
+        (codes, mask), ids = index_mod.gather_live_rows(
+            seg, ("codes", "mask"))
+        return index_mod.make_hamming_segment(
+            codes, mask, state.backend_state.bits, ids)
+
+    def _seg_payload_bytes(self, payload, n_live: int) -> int:
+        bits = int(payload.bits)
+        return binary_mod.packed_nbytes(n_live * payload.codes.shape[-1],
+                                        bits)
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
         s = state.backend_state
+        seg = self._segmented(state)
+        if seg is not None:
+            return self._segmented_storage(state, seg)
         n_codes = int(s.index.codes.size)
         cb = state.codebook
         return {"payload": binary_mod.packed_nbytes(n_codes, s.bits),
@@ -84,20 +117,40 @@ class HammingBackend(IndexBackend):
                        k: int = 256, **knobs) -> RetrieverState:
         bits = knobs.get("bits", binary_mod.bits_for_k(k))
         sds, cdt = jax.ShapeDtypeStruct, code_dtype(1 << bits)
-        ix = index_mod.HammingIndex(
-            codes=sds((n, md), cdt),
-            mask=sds((n, md), jnp.bool_),
-            doc_ids=sds((n,), jnp.int32),
-            bits=sds((), jnp.int32))
+
+        def seg_payload(cap):
+            return index_mod.HammingIndex(
+                codes=sds((cap, md), cdt),
+                mask=sds((cap, md), jnp.bool_),
+                doc_ids=sds((cap,), jnp.int32),
+                bits=sds((), jnp.int32))
+
+        segments = knobs.get("segments")
+        if segments is not None:
+            id_cap = knobs.get("id_cap",
+                               index_mod.segment_capacity(sum(segments)))
+            bs = index_mod.SegmentedState(
+                tuple(seg_payload(c) for c in segments),
+                tuple(sds((c,), jnp.bool_) for c in segments),
+                sds((id_cap,), jnp.int32))
+            n = id_cap
+        else:
+            bs = seg_payload(n)
         return RetrieverState(
             codebook=sds((k, d), jnp.float32),
-            backend_state=HammingState(ix, bits),
+            backend_state=HammingState(bs, bits),
             rerank_codes=sds((n, md), cdt),
             rerank_mask=sds((n, md), jnp.bool_))
 
     def _state_aux(self, state: RetrieverState):
         return state.backend_state.bits
 
-    def state_template(self, aux) -> RetrieverState:
-        return RetrieverState(
-            0, HammingState(index_mod.HammingIndex(0, 0, 0, 0), aux), 0, 0)
+    def state_template(self, aux, n_segments: int = 0) -> RetrieverState:
+        if n_segments:
+            bs = index_mod.SegmentedState(
+                tuple(index_mod.HammingIndex(0, 0, 0, 0)
+                      for _ in range(n_segments)),
+                (0,) * n_segments, 0)
+        else:
+            bs = index_mod.HammingIndex(0, 0, 0, 0)
+        return RetrieverState(0, HammingState(bs, aux), 0, 0)

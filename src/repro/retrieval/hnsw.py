@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import graph as graph_mod
+from repro.core import index as index_mod
 from repro.retrieval.base import (Corpus, IndexBackend, Query,
                                   RetrieverState, encode_corpus,
                                   register_backend)
@@ -57,6 +58,11 @@ class HNSWBackend(IndexBackend):
     def search(self, state: RetrieverState, query: Query, *, k: int,
                scan=None) -> Tuple[Array, Array]:
         s = state.backend_state
+        seg = self._segmented(state)
+        if seg is not None:
+            return graph_mod.search_hnsw_live(
+                seg.segments[0], seg.live[0], query.embeddings, query.mask,
+                ef_search=s.ef_search, k=k, scan=scan)
         return graph_mod.search_hnsw(s.index, query.embeddings, query.mask,
                                      ef_search=s.ef_search, k=k, scan=scan)
 
@@ -72,7 +78,37 @@ class HNSWBackend(IndexBackend):
             "does not support candidate-restricted search; use "
             "flat/float_flat/hamming as cascade stages")
 
+    # -- mutation hooks ------------------------------------------------------
+    # hnsw keeps ONE growable graph segment: appends insert into the graph
+    # (Malkov Alg. 1 over the mean decoded-patch vectors) rather than
+    # stacking immutable segments a walk could not cross.
+
+    def _append_segment(self, state: RetrieverState, seg, enc, delta,
+                        cfg: HPCConfig, doc_ids: Array):
+        _, codes, mask = enc
+        ix, live = graph_mod.hnsw_insert(
+            seg.segments[0], seg.live[0], codes, mask, doc_ids, cfg.hnsw)
+        return index_mod.SegmentedState((ix,), (live,), seg.pos_of_id)
+
+    def _compact_payload(self, state: RetrieverState, seg,
+                         cfg: HPCConfig):
+        return graph_mod.hnsw_compact(seg.segments[0], seg.live[0],
+                                      cfg.hnsw)
+
+    def _seg_payload_bytes(self, payload, n_live: int) -> int:
+        codes = payload.codes
+        return n_live * codes.shape[-1] * codes.dtype.itemsize
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
+        seg = self._segmented(state)
+        if seg is not None:
+            out = self._segmented_storage(state, seg)
+            ix = seg.segments[0]
+            # graph bytes are capacity-resident (tombstones stay routable
+            # until compact), so they report on the padded cap
+            out["graph"] = (ix.neighbors.size * ix.neighbors.dtype.itemsize
+                            + ix.doc_vecs.size * ix.doc_vecs.dtype.itemsize)
+            return out
         ix = state.backend_state.index
         cb = state.codebook
         graph_bytes = (ix.neighbors.size * ix.neighbors.dtype.itemsize
@@ -82,6 +118,18 @@ class HNSWBackend(IndexBackend):
                 "codebook": cb.size * cb.dtype.itemsize}
 
     def build_stats(self, state: RetrieverState) -> Dict[str, float]:
+        seg = self._segmented(state)
+        if seg is not None:
+            out = self._segment_stats(seg)
+            ix = seg.segments[0]
+            filled = ix.doc_ids >= 0
+            degree = jnp.sum(ix.neighbors[0] >= 0, axis=-1)
+            out["mean_degree_l0"] = float(
+                jnp.sum(jnp.where(filled, degree, 0))
+                / jnp.maximum(jnp.sum(filled), 1))
+            out["levels"] = float(ix.neighbors.shape[0])
+            out["entry_level"] = float(ix.node_level[ix.entry])
+            return out
         ix = state.backend_state.index
         degree = jnp.sum(ix.neighbors[0] >= 0, axis=-1)
         return {"mean_degree_l0": float(jnp.mean(degree)),
@@ -96,45 +144,74 @@ class HNSWBackend(IndexBackend):
         m = knobs.get("m", cfg.m)
         ef_search = knobs.get("ef_search", cfg.ef_search)
         sds, cdt = jax.ShapeDtypeStruct, code_dtype(k)
-        ix = graph_mod.HNSWIndex(
-            doc_vecs=sds((n, d), jnp.float32),
-            neighbors=sds((levels, n, 2 * m), jnp.int32),
-            entry=sds((), jnp.int32),
-            node_level=sds((n,), jnp.int32),
-            codes=sds((n, md), cdt),
-            mask=sds((n, md), jnp.bool_),
-            doc_ids=sds((n,), jnp.int32),
-            codebook=sds((k, d), jnp.float32))
+
+        def graph_sds(cap):
+            return graph_mod.HNSWIndex(
+                doc_vecs=sds((cap, d), jnp.float32),
+                neighbors=sds((levels, cap, 2 * m), jnp.int32),
+                entry=sds((), jnp.int32),
+                node_level=sds((cap,), jnp.int32),
+                codes=sds((cap, md), cdt),
+                mask=sds((cap, md), jnp.bool_),
+                doc_ids=sds((cap,), jnp.int32),
+                codebook=sds((k, d), jnp.float32))
+
+        segments = knobs.get("segments")
+        if segments is not None:
+            # hnsw keeps one growable segment; only segments[0] is used
+            cap = segments[0]
+            id_cap = knobs.get("id_cap", index_mod.segment_capacity(cap))
+            bs = index_mod.SegmentedState(
+                (graph_sds(cap),), (sds((cap,), jnp.bool_),),
+                sds((id_cap,), jnp.int32))
+            n = id_cap
+        else:
+            bs = graph_sds(n)
         return RetrieverState(
             codebook=sds((k, d), jnp.float32),
-            backend_state=HNSWState(ix, ef_search),
+            backend_state=HNSWState(bs, ef_search),
             rerank_codes=sds((n, md), cdt),
             rerank_mask=sds((n, md), jnp.bool_))
 
     def _state_aux(self, state: RetrieverState):
         return state.backend_state.ef_search
 
-    def state_template(self, aux) -> RetrieverState:
-        return RetrieverState(
-            0, HNSWState(graph_mod.HNSWIndex(0, 0, 0, 0, 0, 0, 0, 0), aux),
-            0, 0)
+    def state_template(self, aux, n_segments: int = 0) -> RetrieverState:
+        if n_segments:
+            bs = index_mod.SegmentedState(
+                tuple(graph_mod.HNSWIndex(0, 0, 0, 0, 0, 0, 0, 0)
+                      for _ in range(n_segments)),
+                (0,) * n_segments, 0)
+        else:
+            bs = graph_mod.HNSWIndex(0, 0, 0, 0, 0, 0, 0, 0)
+        return RetrieverState(0, HNSWState(bs, aux), 0, 0)
 
     def shard_specs(self, state: RetrieverState):
         # The graph walk needs global adjacency + routing vectors, so the
         # graph itself replicates; the scan payload (codes) and the rerank
         # corpus shard over the corpus axis like every other backend.
-        hnsw_specs = graph_mod.HNSWIndex(
-            doc_vecs=(None, None),
-            neighbors=(None, None, None),
-            entry=(),
-            node_level=(None,),
-            codes=("corpus", None),
-            mask=("corpus", None),
-            doc_ids=("corpus",),
-            codebook=(None, None))
+        def graph_leaf_specs():
+            return graph_mod.HNSWIndex(
+                doc_vecs=(None, None),
+                neighbors=(None, None, None),
+                entry=(),
+                node_level=(None,),
+                codes=("corpus", None),
+                mask=("corpus", None),
+                doc_ids=("corpus",),
+                codebook=(None, None))
+
+        seg = self._segmented(state)
+        if seg is not None:
+            # live bits replicate: the walk consults them on every shard
+            bs = index_mod.SegmentedState(
+                tuple(graph_leaf_specs() for _ in seg.segments),
+                tuple((None,) for _ in seg.live),
+                (None,))
+        else:
+            bs = graph_leaf_specs()
         return RetrieverState(
             codebook=(None, None),
-            backend_state=HNSWState(hnsw_specs,
-                                    state.backend_state.ef_search),
+            backend_state=HNSWState(bs, state.backend_state.ef_search),
             rerank_codes=("corpus", None),
             rerank_mask=("corpus", None))

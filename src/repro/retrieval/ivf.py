@@ -72,6 +72,11 @@ class IVFBackend(IndexBackend):
     def search(self, state: RetrieverState, query: Query, *, k: int,
                scan=None) -> Tuple[Array, Array]:
         s = state.backend_state
+        seg = self._segmented(state)
+        if seg is not None:
+            return index_mod.search_ivf_segmented(
+                seg, query.embeddings, query.mask,
+                n_probe=s.n_probe, k=k, scan=scan)
         return index_mod.search_ivf(s.index, query.embeddings, query.mask,
                                     n_probe=s.n_probe, k=k, scan=scan)
 
@@ -87,13 +92,46 @@ class IVFBackend(IndexBackend):
             "does not support candidate-restricted search; use "
             "flat/float_flat/hamming as cascade stages")
 
+    # -- mutation hooks ------------------------------------------------------
+
+    def _delta_segment(self, state, seg, enc, delta, cfg, doc_ids):
+        _, codes, mask = enc
+        return index_mod.make_ivf_segment(
+            codes, mask, state.codebook,
+            seg.segments[0].routing_centroids, doc_ids)
+
+    def _compact_payload(self, state, seg, cfg):
+        # gather flattens the (n_list, cap) slot layout; re-bucket through
+        # the shared routing centroids so compaction rebalances loads
+        (codes, mask), ids = index_mod.gather_live_rows(
+            seg, ("bucket_codes", "bucket_mask"))
+        return index_mod.make_ivf_segment(
+            codes, mask, state.codebook,
+            seg.segments[0].routing_centroids, ids)
+
+    def _seg_payload_bytes(self, payload, n_live: int) -> int:
+        codes = payload.bucket_codes
+        return n_live * codes.shape[-1] * codes.dtype.itemsize
+
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:
+        seg = self._segmented(state)
+        if seg is not None:
+            return self._segmented_storage(state, seg)
         codes = state.backend_state.index.bucket_codes
         cb = state.codebook
         return {"payload": codes.size * codes.dtype.itemsize,
                 "codebook": cb.size * cb.dtype.itemsize}
 
     def build_stats(self, state: RetrieverState) -> Dict[str, float]:
+        seg = self._segmented(state)
+        if seg is not None:
+            # drop-rate is a build-time contract; segments admit every doc
+            # by construction (per-segment cap = realised max bucket load)
+            out = self._segment_stats(seg)
+            first = seg.segments[0]
+            out["n_list"] = int(first.bucket_valid.shape[0])
+            out["bucket_cap"] = int(first.bucket_valid.shape[1])
+            return out
         ix = state.backend_state.index
         n_docs = state.rerank_codes.shape[0]
         return {"ivf_drop_rate": index_mod.ivf_drop_rate(ix, n_docs),
@@ -107,39 +145,69 @@ class IVFBackend(IndexBackend):
         # same padded-dense capacity rule as build_ivf (2x mean load)
         cap = knobs.get("bucket_cap", int(max(8, 2 * -(-n // n_list))))
         sds, cdt = jax.ShapeDtypeStruct, code_dtype(k)
-        ix = index_mod.IVFIndex(
-            routing_centroids=sds((n_list, d), jnp.float32),
-            bucket_codes=sds((n_list, cap, md), cdt),
-            bucket_mask=sds((n_list, cap, md), jnp.bool_),
-            bucket_valid=sds((n_list, cap), jnp.bool_),
-            bucket_doc_ids=sds((n_list, cap), jnp.int32),
-            codebook=sds((k, d), jnp.float32))
+
+        def seg_payload(bucket_cap):
+            return index_mod.IVFIndex(
+                routing_centroids=sds((n_list, d), jnp.float32),
+                bucket_codes=sds((n_list, bucket_cap, md), cdt),
+                bucket_mask=sds((n_list, bucket_cap, md), jnp.bool_),
+                bucket_valid=sds((n_list, bucket_cap), jnp.bool_),
+                bucket_doc_ids=sds((n_list, bucket_cap), jnp.int32),
+                codebook=sds((k, d), jnp.float32))
+
+        segments = knobs.get("segments")
+        if segments is not None:
+            # segmented layout: tuple of per-segment *bucket* capacities
+            id_cap = knobs.get("id_cap", index_mod.segment_capacity(
+                n_list * sum(segments)))
+            bs = index_mod.SegmentedState(
+                tuple(seg_payload(c) for c in segments),
+                tuple(sds((n_list, c), jnp.bool_) for c in segments),
+                sds((id_cap,), jnp.int32))
+            n = id_cap
+        else:
+            bs = seg_payload(cap)
         return RetrieverState(
             codebook=sds((k, d), jnp.float32),
-            backend_state=IVFState(ix, n_probe),
+            backend_state=IVFState(bs, n_probe),
             rerank_codes=sds((n, md), cdt),
             rerank_mask=sds((n, md), jnp.bool_))
 
     def _state_aux(self, state: RetrieverState):
         return state.backend_state.n_probe
 
-    def state_template(self, aux) -> RetrieverState:
-        return RetrieverState(
-            0, IVFState(index_mod.IVFIndex(0, 0, 0, 0, 0, 0), aux), 0, 0)
+    def state_template(self, aux, n_segments: int = 0) -> RetrieverState:
+        if n_segments:
+            bs = index_mod.SegmentedState(
+                tuple(index_mod.IVFIndex(0, 0, 0, 0, 0, 0)
+                      for _ in range(n_segments)),
+                (0,) * n_segments, 0)
+        else:
+            bs = index_mod.IVFIndex(0, 0, 0, 0, 0, 0)
+        return RetrieverState(0, IVFState(bs, aux), 0, 0)
 
     def shard_specs(self, state: RetrieverState):
-        ivf = state.backend_state.index
         # buckets (dim 0 = n_list) spread over the corpus axes; routing
         # centroids + codebook replicated (every query scores all of them)
-        ivf_specs = index_mod.IVFIndex(
-            routing_centroids=(None, None),
-            bucket_codes=("corpus", None, None),
-            bucket_mask=("corpus", None, None),
-            bucket_valid=("corpus", None),
-            bucket_doc_ids=("corpus", None),
-            codebook=(None, None))
+        def ivf_leaf_specs():
+            return index_mod.IVFIndex(
+                routing_centroids=(None, None),
+                bucket_codes=("corpus", None, None),
+                bucket_mask=("corpus", None, None),
+                bucket_valid=("corpus", None),
+                bucket_doc_ids=("corpus", None),
+                codebook=(None, None))
+
+        seg = self._segmented(state)
+        if seg is not None:
+            bs = index_mod.SegmentedState(
+                tuple(ivf_leaf_specs() for _ in seg.segments),
+                tuple(("corpus", None) for _ in seg.live),
+                (None,))
+        else:
+            bs = ivf_leaf_specs()
         return RetrieverState(
             codebook=(None, None),
-            backend_state=IVFState(ivf_specs, state.backend_state.n_probe),
+            backend_state=IVFState(bs, state.backend_state.n_probe),
             rerank_codes=("corpus", None),
             rerank_mask=("corpus", None))

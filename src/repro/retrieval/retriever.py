@@ -96,6 +96,32 @@ class Retriever:
             state.codebook, k=k, doc_ids=ids, valid=ids >= 0,
             scan=self.cfg.scan)
 
+    # -- mutation (LSM segments) ---------------------------------------------
+
+    def add(self, state: RetrieverState, delta: Corpus, *,
+            doc_ids=None) -> RetrieverState:
+        """Append (or upsert) documents without rebuilding (segment append).
+
+        The first mutation normalizes a monolithic build into segmented
+        form (bit-identical search either way). With explicit `doc_ids`,
+        ids already live in the index are upserted — the prior occurrence
+        is tombstoned and the newest segment wins.
+        """
+        return self.backend.add(state, delta, self.cfg, doc_ids=doc_ids)
+
+    def delete(self, state: RetrieverState, doc_ids) -> RetrieverState:
+        """Tombstone documents by global id: they vanish from search
+        results (scores NEG_INF, ids -1) without touching the payload."""
+        return self.backend.delete(state, doc_ids)
+
+    def compact(self, state: RetrieverState) -> RetrieverState:
+        """Fold all segments into one and physically drop tombstones.
+
+        Search over the live corpus is unchanged; storage and scan cost
+        shrink to the live document set.
+        """
+        return self.backend.compact(state, self.cfg)
+
     # -- accounting ---------------------------------------------------------
 
     def storage_bytes(self, state: RetrieverState) -> Dict[str, int]:

@@ -1,6 +1,7 @@
 """Serving substrate: asyncio continuous-batching retrieval server."""
 
 from repro.serving.client import drive  # noqa: F401
+from repro.serving.live import LiveIndexSession  # noqa: F401
 from repro.serving.server import (AsyncRetrievalServer,  # noqa: F401
                                   RetrievalServer, ServeConfig, ServerClosed,
                                   padding_ladder)

@@ -1,0 +1,134 @@
+"""Live-index serving: mutations interleaved with queries, no recompiles.
+
+`LiveIndexSession` couples a `Retriever` over a *segmented* state (see
+core/index.py `SegmentedState`) with the async serving ladder so the
+corpus can grow (`add`), shrink (`delete`) and fold (`compact`) while
+queries keep flowing — without minting new compiled search shapes per
+mutation.
+
+The recompile story has two layers:
+
+  * **Serving ladder** — the server's search function is a fixed wrapper
+    that reads the session's current state *at execution time*; the
+    sentry (``ServeConfig.guard_recompiles``) keys on (B, Mq, dtypes)
+    and its compiled rung set is untouched by mutations. Swapping state
+    never swaps the function the sentry wraps.
+  * **State shapes** — the session jits ONE search function with the
+    state as an *argument*, so jax.jit's cache keys on the state's shape
+    signature. Deletes and upserts flip tombstone bits in place (zero
+    new shapes). Adds append segments whose capacity is bucketed to
+    powers of two (``segment_capacity``), so the distinct-signature
+    registry grows O(log N) with corpus size, not O(#mutations);
+    ``compact`` folds everything back to the single-segment signature.
+    ``state_signatures`` exposes the realised registry so soaks can
+    assert it stays bounded.
+
+Mutations are atomic swaps: the new state is built off-thread from the
+current one, then published with a single reference assignment. Batches
+already staged finish against whichever state they read — a query never
+sees a half-applied mutation.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.retrieval.base import Corpus, Query, RetrieverState
+from repro.retrieval.retriever import Retriever
+from repro.serving.server import RetrievalServer, ServeConfig
+
+__all__ = ["LiveIndexSession"]
+
+
+class LiveIndexSession:
+    """Serve queries over an index that mutates between batches."""
+
+    def __init__(self, retriever: Retriever, state: RetrieverState,
+                 cfg: ServeConfig, *, top_k: Optional[int] = None):
+        self.retriever = retriever
+        self.top_k = cfg.top_k if top_k is None else top_k
+        # normalize up front so the first add doesn't change the treedef
+        # from monolithic to segmented mid-flight
+        self._state = retriever.backend.to_segmented(state)
+        self._mutate_lock = threading.Lock()
+        self._signatures: Dict[Tuple, int] = {}
+        self._record_signature()
+
+        def _search(st, q, qm, qs):
+            return retriever.search(st, Query(q, qm, qs), k=self.top_k)
+
+        self._jsearch = jax.jit(_search)
+
+        def search_fn(q, qm, qs):
+            # read once: the batch runs entirely against this state
+            return self._jsearch(self._state, q, qm, qs)
+
+        self.server = RetrievalServer(search_fn, cfg)
+
+    # -- state registry ------------------------------------------------------
+
+    def _signature(self, state: RetrieverState) -> Tuple:
+        seg = self.retriever.backend._segmented(state)
+        caps = tuple(
+            tuple(jax.numpy.shape(lv)) for lv in seg.live) if seg else ()
+        return (caps, state.rerank_codes.shape[0])
+
+    def _record_signature(self) -> None:
+        key = self._signature(self._state)
+        self._signatures[key] = self._signatures.get(key, 0) + 1
+
+    @property
+    def state(self) -> RetrieverState:
+        return self._state
+
+    def state_signatures(self) -> Dict[Tuple, int]:
+        """Distinct state shape signatures published so far (each is one
+        potential jit cache entry per ladder rung)."""
+        return dict(self._signatures)
+
+    def segment_shapes(self) -> Tuple:
+        return self._signature(self._state)[0]
+
+    # -- mutations -----------------------------------------------------------
+
+    def _publish(self, new_state: RetrieverState) -> None:
+        self._state = new_state       # atomic reference swap
+        self._record_signature()
+
+    def add(self, delta: Corpus, *, doc_ids=None) -> None:
+        with self._mutate_lock:
+            self._publish(self.retriever.add(self._state, delta,
+                                             doc_ids=doc_ids))
+
+    def delete(self, doc_ids) -> None:
+        with self._mutate_lock:
+            self._publish(self.retriever.delete(self._state, doc_ids))
+
+    def compact(self) -> None:
+        with self._mutate_lock:
+            self._publish(self.retriever.compact(self._state))
+
+    # -- serving passthrough -------------------------------------------------
+
+    def query(self, q_emb, q_mask, q_sal, timeout: float = 30.0):
+        return self.server.query(q_emb, q_mask, q_sal, timeout=timeout)
+
+    def submit(self, q_emb, q_mask, q_sal):
+        return self.server.submit(q_emb, q_mask, q_sal)
+
+    def warm_shapes(self, q_emb, q_mask, q_sal, rungs=None) -> None:
+        self.server.warm_shapes(q_emb, q_mask, q_sal, rungs)
+
+    def stats(self) -> Dict[str, Any]:
+        return self.server.stats()
+
+    def recompile_report(self) -> Optional[Dict[str, Any]]:
+        return self.server.recompile_report()
+
+    def build_stats(self) -> Dict[str, float]:
+        return self.retriever.build_stats(self._state)
+
+    def close(self) -> None:
+        self.server.close()

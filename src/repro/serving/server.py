@@ -238,6 +238,17 @@ class AsyncRetrievalServer:
         """(B, Mq) pairs that have hit the jit compile cache."""
         return set(self._warmed)
 
+    def swap_search_fn(self, search_fn: Callable) -> None:
+        """Atomically swap the underlying search function (live index
+        mutation). The recompile sentry — and its signature history — stays
+        in place: the serving ladder's compiled rung set is a property of
+        the *server*, and a swapped-in function must keep honouring it.
+        Batches already staged finish on whichever function they read."""
+        if self.recompile_sentry is not None:
+            self.recompile_sentry.fn = search_fn
+        else:
+            self.search_fn = search_fn
+
     # -- dispatcher ---------------------------------------------------------
 
     async def _dispatch(self) -> None:
@@ -469,6 +480,9 @@ class RetrievalServer:
 
     def warm_shapes(self, q_emb, q_mask, q_sal, rungs=None) -> None:
         self._async.warm_shapes(q_emb, q_mask, q_sal, rungs)
+
+    def swap_search_fn(self, search_fn: Callable) -> None:
+        self._async.swap_search_fn(search_fn)
 
     @property
     def ladder(self) -> Tuple[int, ...]:
