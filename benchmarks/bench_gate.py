@@ -60,6 +60,15 @@ GATED = [
     # are reported headline numbers; treat them as one signal.
     (("scan", "flat_scan_ms_per_query"), "lower", True, None),
     (("scan", "flat_scan_docs_per_sec"), "higher", True, None),
+    # static-cost-model calibration (kernel_bench.flat_scan_bytes_
+    # crosscheck): the analytic bytes/doc the `jaxlint --cost` gate
+    # trusts, divided by XLA's compiled "bytes accessed" for the same
+    # wired search_flat program. Pinned band [0.5, 2.0] — outside it the
+    # model no longer describes the machine and COST_baseline.json
+    # drift numbers stop meaning anything. Deterministic (no timing), so
+    # the band is hard on both sides.
+    (("scan", "flat_scan_bytes_ratio"), "floor", False, 0.5),
+    (("scan", "flat_scan_bytes_ratio"), "ceiling", False, 2.0),
     # compression cascade (retrieval_quality.cascade_metrics — hamming
     # prefilter -> ADC top-p1 -> float rerank of top-p2). The acceptance
     # criterion is the RATIO: the funnel's ground-truth recall@10 must

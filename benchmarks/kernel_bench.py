@@ -52,6 +52,51 @@ def flat_scan_metrics(n_docs: int = 4096, block_docs: int = 256,
             "flat_scan_block_docs": block_docs}
 
 
+def flat_scan_bytes_crosscheck(n_docs: int = 4096, block_docs: int = 256,
+                               verbose: bool = True) -> dict:
+    """Predicted vs measured HBM bytes/doc for the wired flat scan.
+
+    Prices the exact `index.search_flat` computation with the static
+    cost model (repro.analysis.cost_model) and cross-checks against
+    XLA's own compiled cost analysis on this backend. The gate
+    (bench_gate.py) pins the ratio inside [0.5, 2.0]: the analytic
+    model that CI's `jaxlint --cost` drift gate trusts must stay within
+    2x of what the compiler says the program actually moves.
+    """
+    from repro.analysis.cost_model import closed_jaxpr_cost
+    from repro.core import index as index_mod
+    from repro.core.scan import ScanConfig
+
+    B, Mq, D, Md, K = 8, 32, 128, 32, 256
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, Mq, D))
+    cb = jax.random.normal(ks[1], (K, D))
+    codes = jax.random.randint(ks[2], (n_docs, Md), 0, K).astype(jnp.uint8)
+    qm = jnp.ones((B, Mq), bool)
+    dm = jax.random.uniform(ks[3], (n_docs, Md)) > 0.1
+    ix = index_mod.build_flat(codes, dm, cb)
+    scan = ScanConfig(block_docs=block_docs, impl="auto")
+
+    # the corpus rides as an explicit argument so both the cost model
+    # and XLA see it as an input (a closure would hide it in constvars)
+    def fn(q, qm, ix):
+        return index_mod.search_flat(ix, q, qm, k=10, scan=scan)
+
+    pred = closed_jaxpr_cost(jax.make_jaxpr(fn)(q, qm, ix)).bytes
+    analysis = jax.jit(fn).lower(q, qm, ix).compile().cost_analysis()
+    if isinstance(analysis, (list, tuple)):   # older jax returns [dict]
+        analysis = analysis[0]
+    meas = float(analysis["bytes accessed"])
+    pred_per_doc, meas_per_doc = pred / n_docs, meas / n_docs
+    ratio = pred_per_doc / meas_per_doc if meas_per_doc else float("inf")
+    if verbose:
+        print(f"  flat scan bytes/doc  predicted {pred_per_doc:8.1f}  "
+              f"measured {meas_per_doc:8.1f}  ratio {ratio:.2f}")
+    return {"flat_scan_pred_bytes_per_doc": pred_per_doc,
+            "flat_scan_meas_bytes_per_doc": meas_per_doc,
+            "flat_scan_bytes_ratio": ratio}
+
+
 def run(verbose: bool = True) -> List[dict]:
     key = jax.random.PRNGKey(0)
     B, Mq, D, N, Md, K = 8, 32, 128, 4096, 32, 256

@@ -86,6 +86,7 @@ def smoke(json_path=None) -> int:
           f"{casc['cascade_ms_per_query']:.3f} ms/q")
     print("== smoke: streaming flat scan (wired search path) ==")
     scan = kernel_bench.flat_scan_metrics()
+    scan.update(kernel_bench.flat_scan_bytes_crosscheck())
     print("== smoke: live churn (LSM segments, add/delete interleaved) ==")
     churn_m = churn.churn_metrics()
     print(f"  recall@10={churn_m['churn_recall10']:.3f} "

@@ -19,6 +19,14 @@ Rule table (docs/design.md §8):
          crashes when k exceeds the input length, so call sites must
          either route through core/scan.py's sentinel-padded merge or
          carry a ``# noqa: JAX04`` with the static k <= N argument.
+  JAX05  blocking host-sync inside an ``async def`` body:
+         ``block_until_ready``, ``.item()``, or ``np.asarray``/
+         ``np.array`` on device values stall the event loop for the
+         device round-trip — on the serving path that head-of-line
+         blocks every coalesced request behind one transfer. Move the
+         sync into the executor-side compute function (where the PR 2
+         batcher already runs device work) or ``# noqa: JAX05`` calls
+         that only touch host data.
 
 All rules are deliberately heuristic (AST-only, no imports executed):
 false positives are expected to be rare and suppressed with a
@@ -279,5 +287,48 @@ class BareTopKRule(Rule):
                 "`# noqa: JAX04` with the static k <= N argument")
 
 
+class AsyncHostSyncRule(Rule):
+    """JAX05: blocking device sync on the event loop (async def body).
+
+    Only a function's *own* statements are checked: a sync helper
+    defined inside an ``async def`` and handed to
+    ``run_in_executor`` is exactly the right place for these calls, and
+    ``_scopes`` already separates it into its own (non-async) scope.
+    """
+
+    code = "JAX05"
+
+    def check(self, tree, source, path) -> Iterable[Finding]:
+        np_names = _numpy_aliases(tree)
+        for scope, nodes in _scopes(tree):
+            if not isinstance(scope, ast.AsyncFunctionDef):
+                continue
+            for node in nodes:
+                if not isinstance(node, ast.Call):
+                    continue
+                attr = _call_attr(node.func)
+                if attr == "block_until_ready":
+                    yield Finding(
+                        path, node.lineno, "JAX05",
+                        f"block_until_ready in async {scope.name!r} stalls "
+                        "the event loop for a device sync; await it from "
+                        "an executor instead")
+                elif (attr == "item"
+                      and isinstance(node.func, ast.Attribute)):
+                    yield Finding(
+                        path, node.lineno, "JAX05",
+                        f".item() in async {scope.name!r} blocks the event "
+                        "loop on a device->host transfer; move it into "
+                        "the executor-side compute")
+                elif (_call_root(node.func) in np_names
+                      and attr in ("asarray", "array")):
+                    yield Finding(
+                        path, node.lineno, "JAX05",
+                        f"np.{attr} in async {scope.name!r} blocks the "
+                        "event loop if the value lives on device; move "
+                        "the transfer into the executor-side compute, or "
+                        "`# noqa: JAX05` if the input is host data")
+
+
 JAX_RULES = (PRNGKeyReuseRule(), HostSyncRule(), MissingStaticArgRule(),
-             BareTopKRule())
+             BareTopKRule(), AsyncHostSyncRule())

@@ -1,0 +1,515 @@
+"""Jaxpr cost model: per-path FLOP / HBM-traffic roofline contracts.
+
+The paper's efficiency claim is a *bandwidth* claim: 32x smaller codes
+turn the memory-bound ADC scan into 32x less HBM traffic per document.
+PR 6 made the memory *envelope* a statically checked contract; this
+module does the same for compute and traffic so a regression in
+arithmetic intensity is caught at trace time, before any benchmark runs
+(the way PLAID and the ADC literature reason about per-query byte/FLOP
+budgets analytically).
+
+For each ``BudgetManifest`` the analyzer traces the entry point at the
+manifest's two corpus sizes (symbolic ``ShapeDtypeStruct`` — zero
+allocation) and walks the closed jaxpr recursively:
+
+  * **FLOPs** per primitive: ``dot_general`` from its dimension numbers
+    (2*M*N*K per batch element), elementwise/select/compare ops at one
+    FLOP per output element, reductions at one per *input* element,
+    ``top_k``/``sort`` at n*ceil(log2 n). Structural primitives
+    (reshape, broadcast, gather, slices, converts) cost zero FLOPs.
+  * **HBM bytes moved**: top-level inputs (read once) + outputs +
+    *materializing* intermediates. The model is fusion-aware: an
+    elementwise/reduction intermediate small enough to stay resident in
+    on-chip memory (``resident_bytes``, default the budget analyzer's
+    64 MiB block envelope) is assumed fused into its consumer and moves
+    nothing; primitives that inherently produce a new buffer
+    (``dynamic_slice`` out of an HBM operand — the streamed corpus
+    block, ``convert_element_type``, ``concatenate``, ``dot_general``,
+    ``top_k``, ``sort``, scatters) always count; ANY intermediate larger
+    than ``resident_bytes`` counts regardless of primitive — that is
+    exactly how the unblocked ``(B, Mq, N, Md)`` ADC gather shows up.
+  * **Control flow**: ``pjit``-style calls recurse at cost x1; ``scan``
+    bodies recurse x ``length`` (the streaming sweep's corpus traffic
+    scales through the trip count); ``cond`` takes the max over
+    branches; ``while`` bodies count once (a static lower bound — the
+    report carries ``while_loops`` so entry points with data-dependent
+    trip counts, e.g. the hnsw descent, are visibly lower-bounded).
+
+Two-size tracing splits every metric into a static part and a per-doc
+marginal (``flops_per_doc``, ``bytes_per_doc``) exactly like the memory
+budgets. Arithmetic intensity = FLOPs / bytes is classified against the
+declarative per-platform ``RooflineSpec`` table (compute-bound above the
+ridge FLOP/byte, memory-bound below), and the whole report is gated two
+ways by ``tools/jaxlint.py --cost``:
+
+  * **absolute contracts** — a manifest may declare a ``CostContract``
+    (max FLOPs/doc, max traffic bytes/doc): the design envelope, not
+    what the code happens to cost today;
+  * **drift vs baseline** — the committed ``COST_baseline.json``
+    artifact pins every entry point's numbers; an increase beyond
+    tolerance fails CI with the offending primitives named (per-prim
+    FLOP/byte deltas), no benchmark run required.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.analysis.jaxpr_budget import VIEW_PRIMS
+
+__all__ = [
+    "Cost",
+    "CostContract",
+    "CostViolation",
+    "RooflineSpec",
+    "ROOFLINES",
+    "RESIDENT_BYTES",
+    "check_against_baseline",
+    "classify_bound",
+    "cost_report",
+    "jaxpr_cost",
+    "load_baseline",
+    "write_baseline",
+]
+
+MiB = 2 ** 20
+
+# Fusion-awareness threshold: intermediates at or below this stay
+# resident (cache/VMEM at block scale) and move no HBM bytes; anything
+# larger spills. Deliberately the same 64 MiB envelope jaxpr_budget
+# enforces for the blocked working set — the two models agree on what
+# "fits on chip" means.
+RESIDENT_BYTES = 64 * MiB
+
+# Primitives whose output never moves bytes on its own: relayouts and
+# lazily-generated values XLA folds into consumers at any size.
+_FREE_PRIMS = VIEW_PRIMS | {"broadcast_in_dim", "iota", "copy"}
+
+# Primitives that inherently write a new buffer regardless of size:
+# slices streamed out of HBM operands, dtype converts, concatenations,
+# MXU outputs, sorts. (`gather` is deliberately NOT here: a block-sized
+# table lookup fuses into its reduction; the *unblocked* gather is
+# caught by the resident_bytes threshold instead.)
+_MATERIALIZING = {
+    "dynamic_slice", "dynamic_update_slice", "concatenate",
+    "convert_element_type", "dot_general", "top_k", "sort",
+    "scatter", "scatter-add", "scatter_add", "pad",
+}
+
+# One FLOP per *output* element.
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "rem", "pow", "integer_pow", "max", "min",
+    "neg", "abs", "sign", "floor", "ceil", "round", "exp", "log", "log1p",
+    "expm1", "tanh", "logistic", "sqrt", "rsqrt", "cbrt", "erf", "erfc",
+    "sin", "cos", "tan", "atan2", "and", "or", "xor", "not", "shift_left",
+    "shift_right_logical", "shift_right_arithmetic", "population_count",
+    "clz", "nextafter", "select_n", "clamp", "eq", "ne", "lt", "le", "gt",
+    "ge", "is_finite", "square",
+}
+
+# One FLOP per *input* element (the reduction tree).
+_REDUCERS = {
+    "reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and",
+    "reduce_or", "reduce_xor", "argmax", "argmin", "reduce_precision",
+    "cumsum", "cummax", "cummin", "cumprod", "cumlogsumexp",
+}
+
+# eqn params that carry sub-jaxprs to recurse into at cost x1
+_CALL_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineSpec:
+    """One platform's roofline: peak FLOP/s and HBM bandwidth.
+
+    ``ridge`` is the arithmetic intensity (FLOP/byte) at which the
+    platform transitions from memory- to compute-bound.
+    """
+
+    name: str
+    peak_flops: float       # FLOP/s
+    hbm_bw: float           # bytes/s
+
+    @property
+    def ridge(self) -> float:
+        return self.peak_flops / self.hbm_bw
+
+
+def _default_rooflines() -> Tuple[RooflineSpec, ...]:
+    # TPU numbers come from the one source of truth (launch/mesh.py —
+    # the same constants the dry-run roofline report uses).
+    from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+    return (
+        RooflineSpec("tpu_v5e", PEAK_FLOPS_BF16, HBM_BW),
+        # a CI-class x86 core: ~100 GFLOP/s f32, ~40 GB/s DRAM
+        RooflineSpec("cpu_ci", 100e9, 40e9),
+    )
+
+
+ROOFLINES: Tuple[RooflineSpec, ...] = _default_rooflines()
+
+
+@dataclasses.dataclass(frozen=True)
+class CostContract:
+    """Absolute per-path design envelope (declared on a manifest).
+
+    Numbers come from the entry point's *design*, not from what it
+    happens to cost today — the drift gate vs COST_baseline.json handles
+    "today"; this handles "ever".
+    """
+
+    max_flops_per_doc: Optional[float] = None
+    max_bytes_per_doc: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CostViolation:
+    """One cost-contract / baseline-drift violation."""
+
+    manifest: str
+    kind: str        # "contract" | "drift" | "baseline"
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.manifest}] {self.kind}: {self.detail}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Cost:
+    """Accumulated FLOPs / HBM bytes with a per-primitive breakdown."""
+
+    __slots__ = ("flops", "bytes", "prim_flops", "prim_bytes",
+                 "while_loops")
+
+    def __init__(self):
+        self.flops = 0
+        self.bytes = 0
+        self.prim_flops: Dict[str, int] = {}
+        self.prim_bytes: Dict[str, int] = {}
+        self.while_loops = 0
+
+    def add_flops(self, prim: str, n: int) -> None:
+        if n:
+            self.flops += n
+            self.prim_flops[prim] = self.prim_flops.get(prim, 0) + n
+
+    def add_bytes(self, prim: str, n: int) -> None:
+        if n:
+            self.bytes += n
+            self.prim_bytes[prim] = self.prim_bytes.get(prim, 0) + n
+
+    def merge(self, other: "Cost", times: int = 1) -> None:
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        self.while_loops += other.while_loops
+        for k, v in other.prim_flops.items():
+            self.prim_flops[k] = self.prim_flops.get(k, 0) + v * times
+        for k, v in other.prim_bytes.items():
+            self.prim_bytes[k] = self.prim_bytes.get(k, 0) + v * times
+
+
+def _aval_elems(aval) -> Optional[int]:
+    shape = getattr(aval, "shape", None)
+    if shape is None or getattr(aval, "dtype", None) is None:
+        return None
+    return int(np.prod(shape, dtype=np.int64)) if len(shape) else 1
+
+
+def _aval_bytes(aval) -> Optional[int]:
+    n = _aval_elems(aval)
+    if n is None:
+        return None
+    return n * np.dtype(aval.dtype).itemsize
+
+
+def _dot_general_flops(eqn) -> int:
+    """2 * batch * M * N * K from the dimension numbers."""
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    batch = int(np.prod([lhs.shape[i] for i in lb], dtype=np.int64)) \
+        if lb else 1
+    contract = int(np.prod([lhs.shape[i] for i in lc], dtype=np.int64)) \
+        if lc else 1
+    m = int(np.prod([d for i, d in enumerate(lhs.shape)
+                     if i not in set(lc) | set(lb)], dtype=np.int64))
+    n = int(np.prod([d for i, d in enumerate(rhs.shape)
+                     if i not in set(rc) | set(rb)], dtype=np.int64))
+    return 2 * batch * m * n * contract
+
+
+def _eqn_flops(eqn) -> int:
+    name = eqn.primitive.name
+    if name == "dot_general":
+        return _dot_general_flops(eqn)
+    if name in _ELEMENTWISE:
+        out = _aval_elems(eqn.outvars[0].aval)
+        return out or 0
+    if name in _REDUCERS:
+        src = _aval_elems(eqn.invars[0].aval)
+        return src or 0
+    if name in ("top_k", "sort"):
+        src = _aval_elems(eqn.invars[0].aval) or 0
+        return src * max(1, math.ceil(math.log2(max(src, 2))))
+    return 0
+
+
+def _sub_jaxprs(param_value):
+    vals = param_value if isinstance(param_value, (tuple, list)) \
+        else (param_value,)
+    for v in vals:
+        inner = getattr(v, "jaxpr", None)
+        if inner is not None and hasattr(inner, "eqns"):
+            yield inner
+        elif hasattr(v, "eqns"):
+            yield v
+
+
+def jaxpr_cost(jaxpr, *, resident_bytes: int = RESIDENT_BYTES,
+               _counted=None) -> Cost:
+    """Walk one (possibly nested) jaxpr; returns intermediate-only Cost.
+
+    Input/output traffic is added by :func:`closed_jaxpr_cost` — this
+    function prices equations so control-flow recursion can scale it.
+    ``_counted`` collects ids of vars whose bytes were already charged,
+    so top-level outvars are not double-counted.
+    """
+    cost = Cost()
+    counted = _counted if _counted is not None else set()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+
+        if name == "scan":
+            inner = Cost()
+            for sub in _sub_jaxprs(eqn.params["jaxpr"]):
+                inner.merge(jaxpr_cost(sub, resident_bytes=resident_bytes))
+            cost.merge(inner, times=int(eqn.params.get("length", 1)))
+            # stacked ys / final carries land as this eqn's outvars:
+            # price them with the standard rule below
+        elif name == "while":
+            cost.while_loops += 1
+            for key in ("cond_jaxpr", "body_jaxpr"):
+                for sub in _sub_jaxprs(eqn.params[key]):
+                    cost.merge(jaxpr_cost(sub,
+                                          resident_bytes=resident_bytes))
+        elif name == "cond":
+            branches = [Cost() for _ in eqn.params["branches"]]
+            for acc, br in zip(branches, eqn.params["branches"]):
+                for sub in _sub_jaxprs(br):
+                    acc.merge(jaxpr_cost(sub,
+                                         resident_bytes=resident_bytes))
+            if branches:
+                cost.merge(max(branches, key=lambda c: (c.flops, c.bytes)))
+        else:
+            recursed = False
+            for key in _CALL_PARAMS:
+                if key in eqn.params:
+                    for sub in _sub_jaxprs(eqn.params[key]):
+                        cost.merge(jaxpr_cost(
+                            sub, resident_bytes=resident_bytes))
+                        recursed = True
+            if not recursed:
+                cost.add_flops(name, _eqn_flops(eqn))
+
+        # traffic: outputs of this eqn (call-like eqns included — their
+        # result buffers are written once at this level)
+        if name in _FREE_PRIMS:
+            continue
+        for v in eqn.outvars:
+            b = _aval_bytes(v.aval)
+            if b is None:
+                continue
+            if name in _MATERIALIZING or b > resident_bytes:
+                cost.add_bytes(name, b)
+                counted.add(id(v))
+    return cost
+
+
+def closed_jaxpr_cost(closed, *, resident_bytes: int = RESIDENT_BYTES
+                      ) -> Cost:
+    """Full traffic model: invars (read once) + eqns + uncounted outvars."""
+    counted: set = set()
+    cost = jaxpr_cost(closed.jaxpr, resident_bytes=resident_bytes,
+                      _counted=counted)
+    for v in closed.jaxpr.invars:
+        b = _aval_bytes(v.aval)
+        if b is not None:
+            cost.add_bytes("<inputs>", b)
+    for v in closed.jaxpr.outvars:
+        if id(v) in counted:
+            continue
+        b = _aval_bytes(getattr(v, "aval", None))
+        if b is not None:
+            cost.add_bytes("<outputs>", b)
+    return cost
+
+
+def classify_bound(intensity: float,
+                   rooflines: Tuple[RooflineSpec, ...] = ROOFLINES
+                   ) -> Dict[str, str]:
+    """'memory' below each platform's ridge intensity, 'compute' above."""
+    return {r.name: ("compute" if intensity >= r.ridge else "memory")
+            for r in rooflines}
+
+
+def cost_report(manifest, *, resident_bytes: int = RESIDENT_BYTES) -> dict:
+    """Trace one manifest at (n, n_alt) and price both; returns the
+    machine-readable entry COST_baseline.json pins."""
+    fn_big, args_big = manifest.trace(manifest.n)
+    big = closed_jaxpr_cost(jax.make_jaxpr(fn_big)(*args_big),
+                            resident_bytes=resident_bytes)
+    fn_small, args_small = manifest.trace(manifest.n_alt)
+    small = closed_jaxpr_cost(jax.make_jaxpr(fn_small)(*args_small),
+                              resident_bytes=resident_bytes)
+    dn = manifest.n - manifest.n_alt
+    flops_per_doc = (big.flops - small.flops) / dn
+    bytes_per_doc = (big.bytes - small.bytes) / dn
+    intensity = big.flops / big.bytes if big.bytes else float("inf")
+    report = {
+        "manifest": manifest.name,
+        "n": manifest.n,
+        "flops": big.flops,
+        "hbm_bytes": big.bytes,
+        "flops_per_doc": flops_per_doc,
+        "bytes_per_doc": bytes_per_doc,
+        "intensity": intensity,
+        "bound": classify_bound(intensity),
+        "while_loops": big.while_loops,
+        "prim_flops": dict(sorted(big.prim_flops.items(),
+                                  key=lambda kv: -kv[1])),
+        "prim_bytes": dict(sorted(big.prim_bytes.items(),
+                                  key=lambda kv: -kv[1])),
+    }
+    contract = getattr(manifest, "cost", None)
+    violations: List[CostViolation] = []
+    if contract is not None:
+        if (contract.max_flops_per_doc is not None
+                and flops_per_doc > contract.max_flops_per_doc):
+            violations.append(CostViolation(
+                manifest.name, "contract",
+                f"flops_per_doc {flops_per_doc:.1f} exceeds the declared "
+                f"envelope {contract.max_flops_per_doc:.1f} "
+                f"(top FLOP primitives: {_top(big.prim_flops)})"))
+        if (contract.max_bytes_per_doc is not None
+                and bytes_per_doc > contract.max_bytes_per_doc):
+            violations.append(CostViolation(
+                manifest.name, "contract",
+                f"bytes_per_doc {bytes_per_doc:.1f} exceeds the declared "
+                f"envelope {contract.max_bytes_per_doc:.1f} "
+                f"(top traffic primitives: {_top(big.prim_bytes)})"))
+    report["violations"] = [v.to_json() for v in violations]
+    report["ok"] = not violations
+    return report
+
+
+def _top(prim_map: Dict[str, int], k: int = 3) -> str:
+    items = sorted(prim_map.items(), key=lambda kv: -kv[1])[:k]
+    return ", ".join(f"{p}={v:.3g}" for p, v in items)
+
+
+def _prim_deltas(cur: Dict[str, float], base: Dict[str, float],
+                 k: int = 3) -> str:
+    """Name the primitive chain responsible for an inflation."""
+    deltas = {p: cur.get(p, 0) - base.get(p, 0)
+              for p in set(cur) | set(base)}
+    worst = sorted(deltas.items(), key=lambda kv: -kv[1])[:k]
+    worst = [(p, d) for p, d in worst if d > 0]
+    if not worst:
+        return "no single primitive dominates"
+    return ", ".join(f"{p} +{d:.3g}" for p, d in worst)
+
+
+# metrics gated against the committed baseline (all "lower is better")
+_GATED_METRICS = ("flops", "hbm_bytes", "flops_per_doc", "bytes_per_doc")
+
+
+def check_against_baseline(reports: List[dict], baseline: dict,
+                           tolerance: float = 0.10) -> List[CostViolation]:
+    """Drift gate: each report's gated metrics vs the committed entry.
+
+    Fails on any metric rising beyond ``tolerance`` (improvements pass —
+    refresh the baseline to bank them), on entry points missing from the
+    baseline (regenerate with ``jaxlint --cost --write-cost-baseline``),
+    and carries the offending per-primitive deltas in the message.
+    """
+    out: List[CostViolation] = []
+    entries = baseline.get("entries", {})
+    for r in reports:
+        name = r["manifest"]
+        base = entries.get(name)
+        if base is None:
+            out.append(CostViolation(
+                name, "baseline",
+                "no entry in COST_baseline.json — regenerate with "
+                "`python tools/jaxlint.py --cost --write-cost-baseline`"))
+            continue
+        for metric in _GATED_METRICS:
+            cur_v, base_v = float(r[metric]), float(base[metric])
+            if cur_v > base_v * (1.0 + tolerance) + 1e-9:
+                which = "prim_flops" if "flops" in metric else "prim_bytes"
+                out.append(CostViolation(
+                    name, "drift",
+                    f"{metric} {base_v:.6g} -> {cur_v:.6g} "
+                    f"(+{(cur_v - base_v) / base_v:.0%} > tol "
+                    f"{tolerance:.0%}); offending primitives: "
+                    f"{_prim_deltas(r.get(which, {}), base.get(which, {}))}"
+                ))
+    known = {r["manifest"] for r in reports}
+    for name in entries:
+        if name not in known:
+            out.append(CostViolation(
+                name, "baseline",
+                "baseline entry has no registered manifest — regenerate "
+                "the baseline after removing/renaming entry points"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Baseline artifact I/O
+# ---------------------------------------------------------------------------
+
+BASELINE_PATH = Path(__file__).resolve().parents[3] / "COST_baseline.json"
+
+
+def load_baseline(path=None) -> Optional[dict]:
+    p = Path(path) if path is not None else BASELINE_PATH
+    if not p.exists():
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def write_baseline(reports: List[dict], path=None) -> Path:
+    p = Path(path) if path is not None else BASELINE_PATH
+    entries = {}
+    for r in reports:
+        entries[r["manifest"]] = {
+            "flops": r["flops"],
+            "hbm_bytes": r["hbm_bytes"],
+            "flops_per_doc": r["flops_per_doc"],
+            "bytes_per_doc": r["bytes_per_doc"],
+            "intensity": r["intensity"],
+            "bound": r["bound"],
+            "while_loops": r["while_loops"],
+            "prim_flops": r["prim_flops"],
+            "prim_bytes": r["prim_bytes"],
+        }
+    payload = {
+        "schema": 1,
+        "resident_bytes": RESIDENT_BYTES,
+        "rooflines": {r.name: {"peak_flops": r.peak_flops,
+                               "hbm_bw": r.hbm_bw, "ridge": r.ridge}
+                      for r in ROOFLINES},
+        "entries": dict(sorted(entries.items())),
+    }
+    with open(p, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return p

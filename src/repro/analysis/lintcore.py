@@ -50,6 +50,14 @@ class Finding:
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
 
+    def to_github(self) -> str:
+        """GitHub Actions workflow-command form — printed to stdout in
+        CI, the finding renders as an inline PR annotation."""
+        msg = self.msg.replace("%", "%25").replace("\r", "%0D")
+        msg = msg.replace("\n", "%0A")
+        return (f"::error file={self.path},line={self.line},"
+                f"title={self.code}::{msg}")
+
 
 class Rule:
     """One lint rule: inspect a parsed module, yield findings.

@@ -18,6 +18,12 @@ honor:
   * ``out_dtypes`` — the result dtype contract: float32 scores + int32
     doc ids everywhere except hamming, whose popcount scores stay int32
     end to end.
+  * ``cost`` — an optional ``CostContract`` (max FLOPs/doc, max HBM
+    bytes/doc) checked by the jaxpr cost model
+    (``repro.analysis.cost_model``, ``jaxlint --cost``). Like the
+    memory numbers these are *design* envelopes with headroom, not
+    today's measurements — drift against today's numbers is gated
+    separately by ``COST_baseline.json``.
 
 The trace geometry is deliberately small everywhere except N (B=8, Mq=8,
 Md=16, D=16, K=256): budgets scale linearly in those, and a small
@@ -41,6 +47,7 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.cost_model import CostContract
 from repro.core import scan as scan_mod
 from repro.retrieval.base import Query, code_dtype, get_backend
 from repro.retrieval.config import HPCConfig
@@ -80,6 +87,7 @@ class BudgetManifest:
     out_dtypes: Optional[Tuple] = (jnp.float32, jnp.int32)
     n: int = N
     n_alt: int = N_ALT
+    cost: Optional[CostContract] = None
     notes: str = ""
 
 
@@ -219,12 +227,15 @@ for _m in (
     BudgetManifest(
         name="search_flat",
         trace=_backend_trace("flat"),
+        cost=CostContract(max_flops_per_doc=4096, max_bytes_per_doc=512),
         notes="PR 5's hand-written 64 MB jaxpr test, as a manifest. The "
               "blocked scan may keep doc ids / validity O(N); the (B, N) "
               "score matrix (32 B/doc at B=8) must never come back."),
     BudgetManifest(
         name="search_float_flat",
         trace=_backend_trace("float_flat"),
+        cost=CostContract(max_flops_per_doc=65536,
+                          max_bytes_per_doc=12288),
         notes="Uncompressed baseline: the (N, Md, D) corpus is an input, "
               "not an intermediate — blocks of it are sliced, never "
               "padded/copied whole."),
@@ -232,6 +243,8 @@ for _m in (
         name="search_hamming",
         trace=_backend_trace("hamming"),
         out_dtypes=(jnp.int32, jnp.int32),
+        cost=CostContract(max_flops_per_doc=16384,
+                          max_bytes_per_doc=8192),
         notes="Popcount MaxSim: scores stay int32 end to end (the dtype "
               "contract half of this entry)."),
     BudgetManifest(
@@ -247,6 +260,8 @@ for _m in (
     BudgetManifest(
         name="search_cascade",
         trace=_backend_trace("cascade", p1=1024, p2=64),
+        cost=CostContract(max_flops_per_doc=16384,
+                          max_bytes_per_doc=12288),
         notes="Staged funnel: the hamming prefilter is the only O(N) "
               "pass (blocked, like search_hamming); the ADC and float "
               "stages gather per-query (B, p1)/(B, p2) pools — "
@@ -298,22 +313,29 @@ for _m in (
     BudgetManifest(
         name="scan_quantized_shared",
         trace=_scan_quantized_shared_trace,
+        cost=CostContract(max_flops_per_doc=4096, max_bytes_per_doc=512),
         notes="The scan engine itself, shared-corpus layout."),
     BudgetManifest(
         name="scan_quantized_per_query",
         trace=_scan_quantized_per_query_trace,
         max_bytes_per_doc=48.0,
+        cost=CostContract(max_flops_per_doc=8192,
+                          max_bytes_per_doc=2048),
         notes="Per-query pools carry (B, P) ids/valid by construction: "
               "B * 5 B per pooled candidate before scoring starts."),
     BudgetManifest(
         name="scan_maxsim",
         trace=_scan_maxsim_trace,
+        cost=CostContract(max_flops_per_doc=65536,
+                          max_bytes_per_doc=12288),
         notes="Float scan: block slices of the fp32 corpus are the "
               "working set; nothing else may scale with N."),
     BudgetManifest(
         name="scan_hamming",
         trace=_scan_hamming_trace,
         out_dtypes=(jnp.int32, jnp.int32),
+        cost=CostContract(max_flops_per_doc=16384,
+                          max_bytes_per_doc=8192),
         notes="Binary scan: int32 popcount scores, packed-code blocks."),
 ):
     _register(_m)

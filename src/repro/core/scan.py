@@ -50,6 +50,7 @@ from repro.core import late_interaction as li
 from repro.kernels import hamming as hamming_k
 from repro.kernels import maxsim as maxsim_k
 from repro.kernels import quantized_maxsim as qmaxsim_k
+from repro.kernels import vmem
 
 Array = jax.Array
 NEG_INF = li.NEG_INF
@@ -99,9 +100,22 @@ def score_sentinel(dtype) -> Array:
     return jnp.array(-jnp.inf, dtype)
 
 
-def _kernel_tile(t: int, default: int) -> int:
-    """Inner Pallas doc tile for a t-doc block (VMEM-sized, divides t)."""
-    return default if (t > default and t % default == 0) else t
+def _kernel_tile(t: int, default: int, fits=None) -> int:
+    """Inner Pallas doc tile for a t-doc block (VMEM-sized, divides t).
+
+    ``fits(tile) -> bool`` is the kernel's VMEM predicate (its
+    ``*_vmem_bytes`` footprint vs ``kernels.vmem.VMEM_BUDGET_BYTES``).
+    The tile halves — staying a divisor of ``t`` — until it fits, so a
+    wide geometry (e.g. the ADC kernel's one-hot tile at K=512, Md=128)
+    gets a smaller doc tile instead of a Mosaic VMEM failure; if no
+    halving fits, the kernel's own ``ValueError`` surfaces the computed
+    footprint.
+    """
+    tile = default if (t > default and t % default == 0) else t
+    if fits is not None:
+        while tile > 1 and tile % 2 == 0 and not fits(tile):
+            tile //= 2
+    return tile
 
 
 # ---------------------------------------------------------------------------
@@ -244,10 +258,17 @@ def quantized_maxsim_topk(q: Array, q_mask: Array, codes: Array,
     else:
         interpret = mode == "interpret"
         qm_f = q_mask.astype(jnp.float32)
+        mq_n, k_n = table.shape[1], table.shape[2]
+        md_n = codes.shape[-1]
+
+        def qfits(tile):
+            return vmem.fits(qmaxsim_k.qmaxsim_vmem_bytes(
+                tile, mq_n, k_n, md_n))
+
         if per_query:
             def score_block(c, m):
                 def one(tab, qm1, cc, mm):
-                    tile = _kernel_tile(cc.shape[0], 32)
+                    tile = _kernel_tile(cc.shape[0], 32, fits=qfits)
                     return qmaxsim_k.quantized_maxsim_pallas(
                         tab[None], qm1[None], cc.astype(jnp.int32),
                         mm.astype(jnp.float32), block_docs=tile,
@@ -255,7 +276,7 @@ def quantized_maxsim_topk(q: Array, q_mask: Array, codes: Array,
                 return jax.vmap(one)(table, qm_f, c, m)
         else:
             def score_block(c, m):
-                tile = _kernel_tile(c.shape[0], 32)
+                tile = _kernel_tile(c.shape[0], 32, fits=qfits)
                 return qmaxsim_k.quantized_maxsim_pallas(
                     table, qm_f, c.astype(jnp.int32), m.astype(jnp.float32),
                     block_docs=tile, interpret=interpret)
@@ -303,17 +324,23 @@ def maxsim_topk(q: Array, q_mask: Array, docs: Array, d_mask: Array, *,
         interpret = mode == "interpret"
         qm_f = q_mask.astype(jnp.float32)
 
+        mq_n, md_n, d_n = q.shape[1], docs.shape[-2], docs.shape[-1]
+
+        def mfits(tile):
+            return vmem.fits(maxsim_k.maxsim_vmem_bytes(
+                tile, mq_n, md_n, d_n))
+
         if per_query:
             def score_block(d, m):
                 def one(q1, qm1, d1, m1):
-                    tile = _kernel_tile(d1.shape[0], 16)
+                    tile = _kernel_tile(d1.shape[0], 16, fits=mfits)
                     return maxsim_k.maxsim_pallas(
                         q1[None], qm1[None], d1, m1.astype(jnp.float32),
                         block_docs=tile, interpret=interpret)[0]
                 return jax.vmap(one)(q, qm_f, d, m)
         else:
             def score_block(d, m):
-                tile = _kernel_tile(d.shape[0], 16)
+                tile = _kernel_tile(d.shape[0], 16, fits=mfits)
                 return maxsim_k.maxsim_pallas(q, qm_f, d,
                                               m.astype(jnp.float32),
                                               block_docs=tile,
@@ -369,10 +396,16 @@ def hamming_maxsim_topk(q_codes: Array, q_mask: Array, d_codes: Array,
         interpret = mode == "interpret"
         qm_f = q_mask.astype(jnp.float32)
 
+        mq_n, md_n = q_codes.shape[1], d_codes.shape[-1]
+
+        def hfits(tile):
+            return vmem.fits(hamming_k.hamming_vmem_bytes(
+                tile, mq_n, md_n))
+
         if per_query:
             def score_block(d, m):
                 def one(q1, qm1, d1, m1):
-                    tile = _kernel_tile(d1.shape[0], 64)
+                    tile = _kernel_tile(d1.shape[0], 64, fits=hfits)
                     return hamming_k.hamming_maxsim_pallas(
                         q1[None], qm1[None], d1.astype(jnp.int32),
                         m1.astype(jnp.float32), bits=bits,
@@ -381,7 +414,7 @@ def hamming_maxsim_topk(q_codes: Array, q_mask: Array, d_codes: Array,
                 return jnp.maximum(out, float(ii.min)).astype(jnp.int32)
         else:
             def score_block(d, m):
-                tile = _kernel_tile(d.shape[0], 64)
+                tile = _kernel_tile(d.shape[0], 64, fits=hfits)
                 out = hamming_k.hamming_maxsim_pallas(
                     q_codes, qm_f, d.astype(jnp.int32), m.astype(jnp.float32),
                     bits=bits, block_docs=tile, interpret=interpret)

@@ -20,7 +20,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import vmem
+
 NEG_INF = -1e30
+
+
+def hamming_vmem_bytes(block_docs: int, mq: int, md: int) -> int:
+    """Per-grid-step VMEM footprint of ``_hamming_kernel`` in bytes:
+    double-buffered blocks + the (Mq, block_docs, Md) xor/popcount/
+    masked-sim temporaries and per-query reductions. The SMEM bits
+    scalar is excluded (not VMEM)."""
+    blocks = 4 * (2 * mq + 2 * block_docs * md + block_docs)
+    temps = 4 * (4 * mq * block_docs * md + 2 * mq * block_docs)
+    return vmem.DOUBLE_BUFFER * blocks + temps
 
 
 def _hamming_kernel(bits_ref, q_ref, qm_ref, d_ref, dm_ref, out_ref):
@@ -48,7 +60,12 @@ def hamming_maxsim_pallas(q_codes, q_mask, d_codes, d_mask, *, bits: int,
     scores (B, N) f32.  N % block_docs == 0."""
     b, mq = q_codes.shape
     n, md = d_codes.shape
-    assert n % block_docs == 0, (n, block_docs)
+    vmem.check_divisible(n, block_docs, kernel="hamming_maxsim_pallas")
+    vmem.check_vmem(
+        hamming_vmem_bytes(block_docs, mq, md),
+        kernel="hamming_maxsim_pallas",
+        detail=f"block_docs={block_docs}, Mq={mq}, Md={md}; the xor/"
+               f"popcount temporaries are ({mq}, {block_docs}, {md}) i32")
     mask_b = (1 << bits) - 1
     qc = (q_codes.astype(jnp.int32) & mask_b)
     dc = (d_codes.astype(jnp.int32) & mask_b)

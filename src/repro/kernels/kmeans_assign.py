@@ -18,6 +18,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import vmem
+
+
+def kmeans_assign_vmem_bytes(block_n: int, k: int, d: int) -> int:
+    """Per-grid-step VMEM footprint of ``_assign_kernel`` in bytes:
+    double-buffered blocks (points, codebook, codes out) + the
+    (block_n, K) distance temporaries and the centroid-norm fold."""
+    blocks = 4 * (block_n * d + k * d + block_n)
+    temps = 4 * (k * d + k + 2 * block_n * k) + 4 * block_n
+    return vmem.DOUBLE_BUFFER * blocks + temps
+
 
 def _assign_kernel(x_ref, c_ref, out_ref):
     # x_ref: (block_n, D); c_ref: (K, D); out_ref: (block_n,)
@@ -37,7 +48,12 @@ def kmeans_assign_pallas(x, centroids, *, block_n: int = 256,
     """x (N, D), centroids (K, D) -> codes (N,) int32.  N % block_n == 0."""
     n, d = x.shape
     k, _ = centroids.shape
-    assert n % block_n == 0, (n, block_n)
+    vmem.check_divisible(n, block_n, kernel="kmeans_assign_pallas")
+    vmem.check_vmem(
+        kmeans_assign_vmem_bytes(block_n, k, d),
+        kernel="kmeans_assign_pallas",
+        detail=f"block_n={block_n}, K={k}, D={d}; the distance tile is "
+               f"({block_n}, {k}) f32")
     grid = (n // block_n,)
     return pl.pallas_call(
         _assign_kernel,

@@ -26,7 +26,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import vmem
+
 NEG_INF = -1e30
+
+
+def maxsim_vmem_bytes(block_docs: int, mq: int, md: int, d: int) -> int:
+    """Per-grid-step VMEM footprint of ``_maxsim_kernel`` in bytes:
+    double-buffered blocks + the (Mq, block_docs*Md) similarity
+    temporaries (raw + masked) and per-query reductions."""
+    blocks = 4 * (mq * d + mq + block_docs * md * d + block_docs * md
+                  + block_docs)
+    sims = 4 * (2 * mq * block_docs * md + 2 * mq * block_docs)
+    return vmem.DOUBLE_BUFFER * blocks + sims
 
 
 def _maxsim_kernel(q_ref, qm_ref, d_ref, dm_ref, out_ref):
@@ -58,7 +70,12 @@ def maxsim_pallas(q, q_mask, docs, d_mask, *, block_docs: int = 16,
     d_mask (N, Md) f32 -> scores (B, N) f32.  N % block_docs == 0."""
     b, mq, dd = q.shape
     n, md, _ = docs.shape
-    assert n % block_docs == 0, (n, block_docs)
+    vmem.check_divisible(n, block_docs, kernel="maxsim_pallas")
+    vmem.check_vmem(
+        maxsim_vmem_bytes(block_docs, mq, md, dd),
+        kernel="maxsim_pallas",
+        detail=f"block_docs={block_docs}, Mq={mq}, Md={md}, D={dd}; the "
+               f"doc block is ({block_docs * md}, {dd}) f32")
     grid = (b, n // block_docs)
     return pl.pallas_call(
         _maxsim_kernel,

@@ -12,8 +12,12 @@ The in-kernel "gather" is realised as a one-hot matmul
     sim = one_hot(codes, K) @ T^T        # (T*Md, K) @ (K, Mq)
 
 which runs on the MXU with perfectly regular access instead of a serialised
-VPU gather — the standard TPU idiom for small-table lookups. K <= 512 keeps
-the one-hot tile (block_docs*Md, K) in VMEM.
+VPU gather — the standard TPU idiom for small-table lookups. The one-hot
+tile (block_docs*Md, K) dominates the per-grid-step VMEM footprint;
+`qmaxsim_vmem_bytes` prices it and the entry point *checks* it against the
+16 MiB budget (a `ValueError`, not a latent Mosaic failure — e.g. K=512 at
+Md=128 no longer fits the default block_docs=32 and must drop to 16, which
+`core/scan._kernel_tile` now does automatically).
 
 Grid: (B, N // block_docs), doc axis innermost so the per-batch table block
 is reused across the corpus sweep.
@@ -27,7 +31,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import vmem
+
 NEG_INF = -1e30
+
+
+def qmaxsim_vmem_bytes(block_docs: int, mq: int, k: int, md: int) -> int:
+    """Per-grid-step VMEM footprint of ``_qmaxsim_kernel`` in bytes.
+
+    Double-buffered blocks (table, q_mask, codes, d_mask, out) plus the
+    kernel temporaries: the one-hot expansion (iota i32 + eq bool +
+    one-hot f32 over (block_docs*Md, K) — the dominant term) and the
+    similarity/reduction buffers.
+    """
+    blocks = 4 * (mq * k + mq + 2 * block_docs * md + block_docs)
+    onehot = block_docs * md * k * (4 + 1 + 4)
+    sims = 4 * (2 * block_docs * md * mq + 2 * block_docs * mq)
+    return vmem.DOUBLE_BUFFER * blocks + onehot + sims
 
 
 def _qmaxsim_kernel(tab_ref, qm_ref, codes_ref, dm_ref, out_ref):
@@ -62,7 +82,12 @@ def quantized_maxsim_pallas(table, q_mask, codes, d_mask, *,
     d_mask (N, Md) f32 -> scores (B, N) f32.  N % block_docs == 0."""
     b, mq, k = table.shape
     n, md = codes.shape
-    assert n % block_docs == 0, (n, block_docs)
+    vmem.check_divisible(n, block_docs, kernel="quantized_maxsim_pallas")
+    vmem.check_vmem(
+        qmaxsim_vmem_bytes(block_docs, mq, k, md),
+        kernel="quantized_maxsim_pallas",
+        detail=f"block_docs={block_docs}, Mq={mq}, K={k}, Md={md}; the "
+               f"one-hot tile is ({block_docs * md}, {k}) f32")
     grid = (b, n // block_docs)
     return pl.pallas_call(
         _qmaxsim_kernel,

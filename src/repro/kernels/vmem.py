@@ -1,0 +1,62 @@
+"""Shared VMEM-budget accounting for the Pallas kernels.
+
+Every kernel in this package streams fixed-size blocks through VMEM
+(~16 MiB per TPU v5e core, see /docs/design.md §10). Each kernel module
+exposes a ``*_vmem_bytes`` function computing its per-grid-step
+footprint from the same accounting the static verifier
+(``repro.analysis.pallas_check``) applies to the traced jaxpr:
+
+    footprint = DOUBLE_BUFFER * (sum of VMEM in/out block bytes)
+              + sum of in-kernel non-view temporaries
+
+(block operands are double-buffered by the Pallas pipeline; SMEM
+scalars are excluded). The entry points validate this *eagerly* at
+trace time — a tile that cannot fit raises ``ValueError`` carrying the
+computed footprint instead of failing opaquely inside Mosaic — and the
+scan engine's tile picker (``core/scan._kernel_tile``) consults the
+same functions to shrink tiles until they fit.
+"""
+from __future__ import annotations
+
+MiB = 2 ** 20
+
+# TPU v5e per-core VMEM. Other generations are close enough (v4: 16 MiB,
+# v5p: 16 MiB) that one conservative budget serves as the contract.
+VMEM_BUDGET_BYTES = 16 * MiB
+
+# Pallas pipelines block operands: while grid step i computes, step
+# i+1's blocks are prefetched — every block buffer exists twice.
+DOUBLE_BUFFER = 2
+
+__all__ = ["DOUBLE_BUFFER", "MiB", "VMEM_BUDGET_BYTES",
+           "check_divisible", "check_vmem", "fits"]
+
+
+def fits(footprint_bytes: int, budget: int = VMEM_BUDGET_BYTES) -> bool:
+    return footprint_bytes <= budget
+
+
+def check_divisible(n: int, block_docs: int, *, kernel: str,
+                    axis: str = "N") -> None:
+    """The grid contract: the streamed axis must tile exactly."""
+    if block_docs <= 0:
+        raise ValueError(
+            f"{kernel}: block_docs must be positive, got {block_docs}")
+    if n % block_docs:
+        raise ValueError(
+            f"{kernel}: {axis}={n} is not divisible by "
+            f"block_docs={block_docs} — the grid would drop the last "
+            f"{n % block_docs} row(s); pad the operand (kernels/ops.py "
+            f"does) or pick a divisor tile")
+
+
+def check_vmem(footprint_bytes: int, *, kernel: str, detail: str,
+               budget: int = VMEM_BUDGET_BYTES) -> None:
+    """Raise if a kernel's per-grid-step footprint exceeds the budget."""
+    if not fits(footprint_bytes, budget):
+        raise ValueError(
+            f"{kernel}: per-grid-step VMEM footprint "
+            f"{footprint_bytes / MiB:.2f} MiB ({detail}) exceeds the "
+            f"{budget / MiB:.0f} MiB budget — shrink block_docs (the "
+            f"scan engine's _kernel_tile does this automatically) or "
+            f"the table width")

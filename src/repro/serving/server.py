@@ -199,7 +199,8 @@ class AsyncRetrievalServer:
         t_enq = time.perf_counter() if _t_enqueue is None else _t_enqueue
         fut = asyncio.get_running_loop().create_future()
         item = _Item(
-            np.asarray(q_emb), np.asarray(q_mask), np.asarray(q_sal), fut,
+            # client inputs are host arrays by contract — no device sync
+            np.asarray(q_emb), np.asarray(q_mask), np.asarray(q_sal), fut,  # noqa: JAX05
             t_enq,
         )
         with self._lock:
@@ -320,7 +321,10 @@ class AsyncRetrievalServer:
         def _compute():
             out = self.search_fn(q, qm, qs)
             jax.block_until_ready(out)  # only blocking point, off the loop
-            return out
+            # device->host transfer stays on the executor thread too: done
+            # on the event loop it head-of-line blocked every coalesced
+            # request behind one D2H copy (JAX05)
+            return np.asarray(out[0]), np.asarray(out[1])
 
         try:
             scores, ids = await loop.run_in_executor(self._pool, _compute)
@@ -330,7 +334,6 @@ class AsyncRetrievalServer:
                     r.future.set_exception(e)
             self._inflight.release()
             return
-        scores, ids = np.asarray(scores), np.asarray(ids)
         now = time.perf_counter()
         with self._lock:
             self._t_last_done = now

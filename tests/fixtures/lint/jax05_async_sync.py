@@ -1,0 +1,22 @@
+"""Planted JAX05 fixture: event-loop-blocking syncs in async defs (never run)."""
+import asyncio
+
+import numpy as np
+
+
+async def respond(scores):
+    scores.block_until_ready()
+    total = scores.sum().item()
+    host = np.asarray(scores)
+    return total, host
+
+
+async def respond_host(meta):
+    await asyncio.sleep(0)
+    return np.asarray(meta)  # noqa: JAX05 - host-side metadata, no device sync
+
+
+def sync_compute(scores):
+    # non-async scope: the same calls are fine on an executor thread
+    scores.block_until_ready()
+    return np.asarray(scores)

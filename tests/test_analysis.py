@@ -40,6 +40,9 @@ def test_planted_fixtures_fire_at_exact_locations():
         ("jax02_host_sync.py", 7, "JAX02"),
         ("jax03_missing_static.py", 6, "JAX03"),
         ("jax04_bare_topk.py", 6, "JAX04"),
+        ("jax05_async_sync.py", 8, "JAX05"),
+        ("jax05_async_sync.py", 9, "JAX05"),
+        ("jax05_async_sync.py", 10, "JAX05"),
     }, sorted(map(str, findings))
 
 

@@ -1,0 +1,242 @@
+"""Tests for the jaxpr cost model (repro.analysis.cost_model).
+
+Two layers:
+
+  * Ground truth — closed-form FLOP/byte counts for the two scoring
+    primitives the paper's efficiency argument rests on
+    (`quantized_maxsim`, `binary_maxsim`) must match the jaxpr walk
+    EXACTLY at several small shapes. Every term in the formulas is
+    derived in-line from the traced primitive sequence, so a silent
+    change to either the scoring code or the cost rules breaks these.
+  * Gates — the acceptance case: deliberately unblocking the flat scan
+    (the O(N*Mq*Md) ADC gather materialized at full corpus width) must
+    be rejected both by the declared CostContract and by drift vs the
+    committed COST_baseline.json, with the offending primitives named
+    in the violation text.
+"""
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.cost_model import (RESIDENT_BYTES, CostContract,
+                                       RooflineSpec, check_against_baseline,
+                                       classify_bound, closed_jaxpr_cost,
+                                       cost_report, load_baseline,
+                                       write_baseline)
+from repro.analysis.manifests import BudgetManifest, get_manifest
+from repro.core import late_interaction as li
+
+sds = jax.ShapeDtypeStruct
+
+
+# --- ground truth: quantized (ADC) scoring --------------------------------
+
+def _qmaxsim_closed(B, Mq, D, K, N, Md):
+    closed = jax.make_jaxpr(li.quantized_maxsim)(
+        sds((B, Mq, D), jnp.float32), sds((B, Mq), jnp.bool_),
+        sds((N, Md), jnp.uint8), sds((N, Md), jnp.bool_),
+        sds((K, D), jnp.float32))
+    return closed_jaxpr_cost(closed)
+
+
+@pytest.mark.parametrize("B,Mq,D,K,N,Md", [
+    (2, 3, 4, 5, 7, 2),       # all-distinct primes-ish: catches axis swaps
+    (1, 4, 8, 16, 5, 3),
+    (3, 2, 16, 32, 9, 4),
+])
+def test_quantized_maxsim_flops_match_closed_form(B, Mq, D, K, N, Md):
+    cost = _qmaxsim_closed(B, Mq, D, K, N, Md)
+    # traced primitive sequence (one term per FLOP-bearing eqn):
+    #   dot_general  table = q @ cb.T           2*B*Mq*K*D
+    #   lt/add/select_n  wraparound of int idx  3*N*Md
+    #   select_n (mask) + reduce_max            2*B*N*Mq*Md
+    #   mul (q_mask) + reduce_sum               2*B*N*Mq
+    want = 2 * B * Mq * K * D + 3 * N * Md \
+        + 2 * B * N * Mq * Md + 2 * B * N * Mq
+    assert cost.flops == want
+    # the ADC defining property: zero matmul FLOPs scale with N
+    assert cost.prim_flops["dot_general"] == 2 * B * Mq * K * D
+
+
+@pytest.mark.parametrize("B,Mq,D,K,N,Md", [
+    (2, 3, 4, 5, 7, 2),
+    (1, 4, 8, 16, 5, 3),
+    (3, 2, 16, 32, 9, 4),
+])
+def test_quantized_maxsim_bytes_match_closed_form(B, Mq, D, K, N, Md):
+    cost = _qmaxsim_closed(B, Mq, D, K, N, Md)
+    # materializing intermediates:
+    #   dot_general table (B, Mq, K) f32
+    #   convert_element_type: codes->i32 (N, Md), the where fill scalar,
+    #     and q_mask->f32 (B, 1, Mq)
+    # the (B, Mq, N, Md) gather is NOT charged at small N (fuses into
+    # its reduction below resident_bytes) — that is the design point the
+    # unblocked-rejection test below exercises from the other side.
+    inter = 4 * B * Mq * K + (4 * N * Md + 4 + 4 * B * Mq)
+    inputs = 4 * B * Mq * D + B * Mq + N * Md + N * Md + 4 * K * D
+    outputs = 4 * B * N
+    assert cost.bytes == inter + inputs + outputs
+    assert cost.prim_bytes["<inputs>"] == inputs
+    assert cost.prim_bytes["<outputs>"] == outputs
+    assert "gather" not in cost.prim_bytes
+
+
+# --- ground truth: binary (hamming) scoring -------------------------------
+
+def _binary_closed(B, Mq, N, Md):
+    def fn(qc, qm, dc, dm):
+        return li.binary_maxsim(qc, qm, dc, dm, 8)
+    closed = jax.make_jaxpr(fn)(
+        sds((B, Mq), jnp.int32), sds((B, Mq), jnp.bool_),
+        sds((N, Md), jnp.int32), sds((N, Md), jnp.bool_))
+    return closed_jaxpr_cost(closed)
+
+
+@pytest.mark.parametrize("B,Mq,N,Md", [
+    (2, 3, 7, 2),
+    (1, 4, 5, 3),
+    (3, 2, 9, 4),
+])
+def test_binary_maxsim_cost_matches_closed_form(B, Mq, N, Md):
+    cost = _binary_closed(B, Mq, N, Md)
+    # FLOPs: byte-masking `and` on each side (B*Mq + N*Md), then
+    # xor + popcount + sub + mask-select + reduce_max over the full
+    # (B, N, Mq, Md) sim tensor, then mul + reduce_sum over (B, N, Mq)
+    want_flops = (B * Mq + N * Md) + 5 * B * N * Mq * Md + 2 * B * N * Mq
+    assert cost.flops == want_flops
+    assert cost.prim_flops["population_count"] == B * N * Mq * Md
+    # bytes: converts (codes->u32 both sides, popcount->i32 at full sim
+    # width, q_mask->i32) + inputs + the (B, N) i32 output
+    inter = 4 * (2 * B * Mq + N * Md + B * N * Mq * Md)
+    inputs = 5 * B * Mq + 5 * N * Md
+    assert cost.bytes == inter + inputs + 4 * B * N
+
+
+# --- roofline classification ----------------------------------------------
+
+def test_classify_bound_straddles_ridge():
+    spec = RooflineSpec("toy", peak_flops=100.0, hbm_bw=10.0)  # ridge 10
+    assert spec.ridge == 10.0
+    assert classify_bound(5.0, (spec,)) == {"toy": "memory"}
+    assert classify_bound(50.0, (spec,)) == {"toy": "compute"}
+
+
+def test_adc_flat_scan_is_memory_bound_on_tpu():
+    """The paper's premise: on the accelerator the quantized scan sits
+    far below the ridge intensity (it is a traffic problem, not a FLOP
+    problem) — the committed baseline must agree."""
+    base = load_baseline()
+    assert base is not None, "COST_baseline.json must be committed"
+    entry = base["entries"]["search_flat"]
+    assert entry["bound"]["tpu_v5e"] == "memory"
+    assert entry["intensity"] < base["rooflines"]["tpu_v5e"]["ridge"] / 10
+
+
+# --- the acceptance gate: unblocked flat scan is rejected -----------------
+
+def _unblocked_manifest(contract=None):
+    """search_flat with the streaming scan swapped for the one-shot ADC
+    path: the (B, Mq, N, Md) gather materializes at full corpus width."""
+    def trace(n):
+        qe = sds((8, 8, 16), jnp.float32)
+        qm = sds((8, 8), jnp.bool_)
+        codes = sds((n, 16), jnp.uint8)
+        mask = sds((n, 16), jnp.bool_)
+        cb = sds((256, 16), jnp.float32)
+
+        def fn(qe, qm, codes, mask, cb):
+            scores = li.quantized_maxsim(qe, qm, codes, mask, cb)
+            return jax.lax.top_k(scores, 16)  # noqa: JAX04 - fixture trace
+        return fn, (qe, qm, codes, mask, cb)
+
+    return BudgetManifest(name="search_flat", trace=trace, out_dtypes=None,
+                          n=1 << 15, n_alt=1 << 14, cost=contract)
+
+
+def test_unblocked_search_flat_breaks_cost_contract():
+    contract = get_manifest("search_flat").cost
+    assert contract is not None and contract.max_bytes_per_doc is not None
+    report = cost_report(_unblocked_manifest(contract))
+    assert not report["ok"]
+    byte_v = [v for v in report["violations"]
+              if "bytes_per_doc" in v["detail"]]
+    assert byte_v, report["violations"]
+    # the violation names the offending primitive chain
+    assert "gather" in byte_v[0]["detail"]
+    # at n = 2**15 the (8, 8, n, 16) f32 sim tensor is 128 MiB > the
+    # 64 MiB residency envelope: charged in full
+    assert report["prim_bytes"]["gather"] >= 8 * 8 * (1 << 15) * 16 * 4
+
+
+def test_unblocked_search_flat_drifts_from_committed_baseline():
+    baseline = load_baseline()
+    assert baseline is not None, "COST_baseline.json must be committed"
+    report = cost_report(_unblocked_manifest())
+    drift = check_against_baseline([report], baseline)
+    drifted = {v.detail.split()[0] for v in drift if v.kind == "drift"}
+    assert {"hbm_bytes", "bytes_per_doc"} <= drifted, drift
+    named = [v for v in drift if "gather" in v.detail]
+    assert named, "drift must name the gather as the offending primitive"
+
+
+def test_registered_search_flat_matches_committed_baseline():
+    """The committed artifact gates the real path: re-pricing the
+    registered search_flat manifest today must sit inside tolerance."""
+    baseline = load_baseline()
+    assert baseline is not None
+    report = cost_report(get_manifest("search_flat"))
+    assert report["ok"], report["violations"]
+    only = {"entries": {"search_flat": baseline["entries"]["search_flat"]}}
+    assert check_against_baseline([report], only) == []
+
+
+# --- baseline artifact I/O and drift mechanics ----------------------------
+
+def test_baseline_roundtrip_and_missing_entries(tmp_path):
+    report = cost_report(_unblocked_manifest())
+    p = write_baseline([report], tmp_path / "COST_baseline.json")
+    base = load_baseline(p)
+    assert base["schema"] == 1
+    assert base["resident_bytes"] == RESIDENT_BYTES
+    # identical re-run: no drift
+    assert check_against_baseline([report], base) == []
+    # a manifest absent from the baseline is flagged, and a stale
+    # baseline entry with no live manifest is flagged the other way
+    other = dict(report, manifest="brand_new_path")
+    viol = check_against_baseline([other], base)
+    kinds = {(v.manifest, v.kind) for v in viol}
+    assert ("brand_new_path", "baseline") in kinds
+    assert ("search_flat", "baseline") in kinds
+
+
+def test_drift_tolerance_band():
+    report = cost_report(_unblocked_manifest())
+    base = {"entries": {"search_flat": {
+        k: report[k] for k in ("flops", "hbm_bytes", "flops_per_doc",
+                               "bytes_per_doc", "prim_flops", "prim_bytes")
+    }}}
+    inflated = dict(report, flops=report["flops"] * 1.08)
+    assert check_against_baseline([inflated], base) == []  # inside 10%
+    inflated = dict(report, flops=report["flops"] * 1.12)
+    viol = check_against_baseline([inflated], base)
+    assert [v.kind for v in viol] == ["drift"]
+    # improvements never fail
+    improved = dict(report, flops=report["flops"] * 0.5,
+                    hbm_bytes=report["hbm_bytes"] * 0.5)
+    assert check_against_baseline([improved], base) == []
+
+
+def test_contract_dataclass_is_optional_per_axis():
+    m = _unblocked_manifest(CostContract(max_flops_per_doc=1e12))
+    report = cost_report(m)
+    assert report["ok"]  # byte axis undeclared -> not gated
+
+
+def test_baseline_file_is_committed_at_repo_root():
+    from repro.analysis.cost_model import BASELINE_PATH
+    assert BASELINE_PATH.name == "COST_baseline.json"
+    assert BASELINE_PATH.exists()
+    assert (Path(__file__).resolve().parents[1] / "COST_baseline.json"
+            == BASELINE_PATH)

@@ -1,25 +1,41 @@
 """Static-analysis driver for the repro.analysis subsystem.
 
-  python tools/jaxlint.py [--ast] [--jaxpr] [--recompile]
-                          [--json OUT.json] [paths...]
+  python tools/jaxlint.py [--ast] [--jaxpr] [--recompile] [--cost]
+                          [--pallas] [--github] [--json OUT.json]
+                          [--write-cost-baseline] [paths...]
 
 Engines (all run when no engine flag is given):
 
   --ast        AST lints: the ruff-fallback rules (E9/F401/F811/F541)
-               plus the JAX-aware rules JAX01-JAX04 from
+               plus the JAX-aware rules JAX01-JAX05 from
                repro.analysis.astchecks. Paths default to src,
                benchmarks and examples (tests plant deliberate
                violations as analyzer fixtures, so they are linted by
                tools/astlint.py's rule subset instead).
   --jaxpr      Memory-budget manifests: trace every registered entry
-               point (all five backend search_* paths, the facade
-               rerank, the scan engine itself) at symbolic corpus size
-               and enforce the per-entry budgets + dtype contracts from
+               point (all backend search_* paths, the facade rerank,
+               the scan engine itself) at symbolic corpus size and
+               enforce the per-entry budgets + dtype contracts from
                repro.analysis.manifests.
   --recompile  Serving-ladder compile contract: warm a jitted search
                stand-in over the default power-of-two ladder under a
                RecompileSentry and assert it compiles exactly the
                declared rung set, with a consistent jit cache.
+  --cost       Jaxpr cost model: per-entry-point FLOPs, HBM traffic and
+               arithmetic intensity vs the declarative roofline specs
+               (repro.analysis.cost_model); gated two ways — declared
+               CostContract envelopes and drift vs the committed
+               COST_baseline.json (regenerate with
+               --write-cost-baseline after an intentional change).
+  --pallas     Pallas kernel verifier: every pl.pallas_call geometry in
+               the kernel-site registry is checked statically for VMEM
+               footprint, tiling divisibility, output-block coverage
+               and output dtype contracts (PAL01-PAL04,
+               repro.analysis.pallas_check).
+
+--github additionally prints findings as GitHub Actions workflow
+commands (::error file=...) so they render as inline PR annotations;
+it switches on automatically when $GITHUB_ACTIONS is "true".
 
 Network-free and CPU-only; --json writes the machine-readable findings
 (the CI `analysis` job uploads it as an artifact). Exit code 1 on any
@@ -30,6 +46,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from pathlib import Path
 
@@ -50,6 +67,34 @@ def run_jaxpr() -> list:
     from repro.analysis.manifests import manifests
 
     return [report(m) for m in manifests()]
+
+
+def run_cost() -> tuple:
+    """(reports, violations) for every manifest — contract + drift."""
+    from repro.analysis.cost_model import (
+        check_against_baseline,
+        cost_report,
+        load_baseline,
+    )
+    from repro.analysis.manifests import manifests
+
+    reports = [cost_report(m) for m in manifests()]
+    baseline = load_baseline()
+    if baseline is None:
+        from repro.analysis.cost_model import CostViolation
+        drift = [CostViolation(
+            "<all>", "baseline",
+            "COST_baseline.json missing — generate it with "
+            "`python tools/jaxlint.py --cost --write-cost-baseline`")]
+    else:
+        drift = check_against_baseline(reports, baseline)
+    return reports, drift
+
+
+def run_pallas() -> list:
+    from repro.analysis.pallas_check import check_all
+
+    return check_all()
 
 
 def run_recompile() -> dict:
@@ -96,39 +141,100 @@ def run_recompile() -> dict:
     }
 
 
+def _annotate(findings, github: bool) -> None:
+    """Print findings; in --github mode also as inline PR annotations."""
+    for f in findings:
+        print(f)
+        if github:
+            print(f.to_github())
+
+
 def main(argv) -> int:
     ap = argparse.ArgumentParser(prog="jaxlint", description=__doc__)
     ap.add_argument("--ast", action="store_true")
     ap.add_argument("--jaxpr", action="store_true")
     ap.add_argument("--recompile", action="store_true")
+    ap.add_argument("--cost", action="store_true")
+    ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--github", action="store_true",
+                    help="emit GitHub annotations (auto in Actions)")
+    ap.add_argument("--write-cost-baseline", action="store_true",
+                    help="regenerate COST_baseline.json from this run")
     ap.add_argument("--json", metavar="OUT", default=None)
     ap.add_argument("paths", nargs="*", help="--ast paths")
     args = ap.parse_args(argv)
-    run_all = not (args.ast or args.jaxpr or args.recompile)
+    run_all = not (args.ast or args.jaxpr or args.recompile or args.cost
+                   or args.pallas)
+    github = args.github or os.environ.get("GITHUB_ACTIONS") == "true"
 
     out: dict = {}
     failed = False
 
     if args.ast or run_all:
         findings = run_ast(args.paths or list(AST_DEFAULT_PATHS))
-        for f in findings:
-            print(f)
+        _annotate(findings, github)
         print(f"jaxlint --ast: {len(findings)} finding(s)")
         out["ast"] = [f.to_json() for f in findings]
         failed |= bool(findings)
 
     if args.jaxpr or run_all:
+        from repro.analysis.lintcore import Finding
         reports = run_jaxpr()
         bad = [r for r in reports if not r["ok"]]
         for r in bad:
             for v in r["violations"]:
-                print(f"[{v['manifest']}] {v['kind']}: {v['detail']}")
+                msg = f"[{v['manifest']}] {v['kind']}: {v['detail']}"
+                print(msg)
+                if github:
+                    print(Finding("src/repro/analysis/manifests.py", 1,
+                                  "JAXPR", msg).to_github())
         print(
             f"jaxlint --jaxpr: {len(reports)} manifest(s), "
             f"{len(bad)} violating"
         )
         out["jaxpr"] = reports
         failed |= bool(bad)
+
+    if args.cost or run_all:
+        from repro.analysis.cost_model import write_baseline
+        reports, drift = run_cost()
+        if args.write_cost_baseline:
+            path = write_baseline(reports)
+            print(f"jaxlint --cost: wrote {path}")
+            drift = []  # the run IS the new baseline
+        contract = [v for r in reports for v in r["violations"]]
+        for v in contract:
+            print(f"[{v['manifest']}] {v['kind']}: {v['detail']}")
+        for d in drift:
+            print(str(d))
+        if github:
+            from repro.analysis.lintcore import Finding
+            for v in contract:
+                print(Finding("src/repro/analysis/manifests.py", 1,
+                              "COST", f"[{v['manifest']}] "
+                              f"{v['detail']}").to_github())
+            for d in drift:
+                print(Finding("COST_baseline.json", 1, "COST",
+                              str(d)).to_github())
+        print(
+            f"jaxlint --cost: {len(reports)} manifest(s), "
+            f"{len(contract)} contract violation(s), "
+            f"{len(drift)} drift violation(s)"
+        )
+        out["cost"] = {"reports": reports,
+                       "drift": [d.to_json() for d in drift]}
+        failed |= bool(contract) or bool(drift)
+
+    if args.pallas or run_all:
+        findings = run_pallas()
+        _annotate(findings, github)
+        from repro.analysis.pallas_check import kernel_sites
+        print(
+            f"jaxlint --pallas: {len(kernel_sites())} kernel site(s), "
+            f"{len(findings)} finding(s)"
+        )
+        out["pallas"] = [f.to_json() for f in findings]
+        failed |= bool(findings)
 
     if args.recompile or run_all:
         rec = run_recompile()
