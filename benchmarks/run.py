@@ -125,6 +125,13 @@ def smoke(json_path=None) -> int:
              for _ in range(3)]
     med = {k: float(np.median([r[k] for r in sruns]))
            for k in ("p50_ms", "p99_ms", "qps", "mean_batch")}
+    print("== smoke: overload drill (bounded admission, 4x sustained) ==")
+    # service time is pinned via the fault injector, so the sustainable
+    # rate is analytic and the drill gates the resilience machinery
+    # (bounded queue -> bounded admitted p99; shedding never collapses)
+    over = latency.overload_metrics(search_data=search_data)
+    med["overload_p99_ms"] = over["overload_p99_ms"]
+    med["shed_frac_at_4x"] = over["shed_frac_at_4x"]
     full = [r for r in rows if r["model"] == "ColPali-Full"][0]
     hpc = [r for r in rows if r["model"] == "HPC(K=256,p=60)"][0]
     metrics = {

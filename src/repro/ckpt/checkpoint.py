@@ -2,13 +2,16 @@
 
 Format: one directory per step containing
   arrays.npz   — flattened pytree leaves keyed by their tree path
-  meta.json    — step, leaf manifest (path, shape, dtype, int8-moment flag),
+  meta.json    — step, leaf manifest (path, shape, dtype, per-leaf crc32),
                  framework version
   COMMIT       — written last; a checkpoint without it is ignored (torn
                  writes from preempted hosts can never be restored)
 
-Atomicity: write into `<dir>.tmp`, fsync, then os.replace -> the rename is
-the commit point on POSIX. Async: `save_async` snapshots the pytree to host
+Atomicity: write into `<dir>.tmp`, fsync every file *and* the enclosing
+directories, then os.replace -> the rename is the commit point on POSIX.
+Integrity: meta.json records a crc32 per leaf; `restore` verifies every
+array against it and fails naming the corrupt leaf — a bit flip between
+save and restore can never load silently. Async: `save_async` snapshots the pytree to host
 memory synchronously (cheap) and writes on a background thread so the train
 loop overlaps I/O with compute; `wait()` joins before the next save.
 
@@ -28,6 +31,7 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
@@ -45,6 +49,32 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     return out
 
 
+def _crc32(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _write_fsync(path: str, write_fn) -> None:
+    """Write via `write_fn(f)`, flush and fsync before close — a COMMIT
+    must never hit the disk ahead of the data it commits."""
+    with open(path, "wb") as f:
+        write_fn(f)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(dirname: str) -> None:
+    try:
+        fd = os.open(dirname or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(directory: str, step: int, tree: PyTree) -> str:
     """Synchronous atomic save. Returns the committed path."""
     path = os.path.join(directory, f"step_{step:08d}")
@@ -53,20 +83,23 @@ def save(directory: str, step: int, tree: PyTree) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     arrays = _flatten(tree)
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    _write_fsync(os.path.join(tmp, "arrays.npz"),
+                 lambda f: np.savez(f, **arrays))
     meta = {
         "step": step,
         "time": time.time(),
-        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                       "crc32": _crc32(v)}
                    for k, v in arrays.items()},
     }
-    with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump(meta, f)
-    with open(os.path.join(tmp, "COMMIT"), "w") as f:
-        f.write("ok")
+    _write_fsync(os.path.join(tmp, "meta.json"),
+                 lambda f: f.write(json.dumps(meta).encode()))
+    _write_fsync(os.path.join(tmp, "COMMIT"), lambda f: f.write(b"ok"))
+    _fsync_dir(tmp)
     if os.path.exists(path):
         shutil.rmtree(path)
     os.replace(tmp, path)
+    _fsync_dir(directory)
     return path
 
 
@@ -81,6 +114,20 @@ def restore(path: str, template: PyTree,
         raise FileNotFoundError(f"uncommitted/corrupt checkpoint: {path}")
     with np.load(os.path.join(path, "arrays.npz")) as npz:
         arrays = {k: npz[k] for k in npz.files}
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    # verify BEFORE any leaf is device_put: a corrupt checkpoint fails
+    # with the leaf's tree path, it never half-loads
+    for key, arr in arrays.items():
+        want = meta.get("leaves", {}).get(key, {}).get("crc32")
+        if want is None:
+            continue  # pre-crc32 checkpoint: nothing to verify against
+        got = _crc32(arr)
+        if got != int(want):
+            raise ValueError(
+                f"checkpoint {path!r}: checksum mismatch on leaf {key!r} "
+                f"(crc32 {got:#010x} != stored {int(want):#010x}) — "
+                "corrupt; restore an earlier committed step")
     flat, treedef = jax.tree_util.tree_flatten_with_path(template)
     shard_leaves = (jax.tree_util.tree_leaves(shardings)
                     if shardings is not None else [None] * len(flat))

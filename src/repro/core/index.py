@@ -698,6 +698,29 @@ def search_hamming_segmented_candidates(
         doc_ids=ids, valid=valid, scan=scan)
 
 
+def search_hamming_floor(index_or_seg, q_codes: Array, q_mask: Array, *,
+                         bits: int, k: int,
+                         scan: Optional[scan_mod.ScanConfig] = None
+                         ) -> Tuple[Array, Array]:
+    """Degraded-serving floor: hamming-only scan with float32 scores.
+
+    The overload degradation ladder's last rung (docs/design.md §11)
+    answers straight from the popcount prefilter — no ADC rescore, no
+    float rerank. Popcount scores are int32; they are cast to float32
+    here so every ladder level hands the serving fan-out dtype-identical
+    results (a level flip must never change the response signature).
+    Accepts either a `HammingIndex` or a `SegmentedState` of hamming
+    segments, matching the cascade's stage-1 state either way.
+    """
+    if isinstance(index_or_seg, SegmentedState):
+        scores, ids = search_hamming_segmented(
+            index_or_seg, q_codes, q_mask, bits=bits, k=k, scan=scan)
+    else:
+        scores, ids = search_hamming(index_or_seg, q_codes, q_mask,
+                                     bits=bits, k=k, scan=scan)
+    return scores.astype(jnp.float32), ids
+
+
 def gather_live_rows(seg: SegmentedState, leaf_names: Tuple[str, ...]
                      ) -> Tuple[Tuple[Array, ...], Array]:
     """Host-side gather of every live doc's rows in flattened slot order.

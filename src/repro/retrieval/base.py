@@ -33,7 +33,9 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
+import os
 import warnings
+import zlib
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -52,7 +54,34 @@ Array = jax.Array
 #       identifies a v1 file, which still loads)
 #   2 — adds `format_version` + the `segments` count for segmented
 #       LSM states (this version reads v1 files unchanged)
-FORMAT_VERSION = 2
+#   3 — crash-safe writes (tmp file + fsync + atomic rename) and a
+#       per-leaf crc32 `checksums` array; load verifies every leaf and
+#       names the corrupt array instead of returning silently-bad data
+#       (this version reads v1/v2 files unchanged — they carry no
+#       checksums to verify)
+FORMAT_VERSION = 3
+
+
+def leaf_crc32(arr) -> int:
+    """crc32 of an array's raw bytes (shape/dtype ride in the npz header)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def fsync_dir(dirname: str) -> None:
+    """fsync a directory so a just-renamed file survives power loss.
+
+    Best-effort: some filesystems refuse O_RDONLY fsync on directories;
+    the rename itself is still atomic there."""
+    try:
+        fd = os.open(dirname or ".", os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def code_dtype(k: int):
@@ -757,9 +786,22 @@ class IndexBackend:
             payload["segments"] = np.asarray(n_seg, np.int64)
         if aux is not None:
             payload["aux"] = np.asarray(aux, np.int64)
+        # v3: per-leaf crc32, ordered like the leaf keys — load verifies
+        # and names the corrupt array instead of returning bad data
+        payload["checksums"] = np.asarray(
+            [leaf_crc32(payload[f"leaf_{i:04d}"])
+             for i in range(len(leaves))], np.uint32)
         if not path.endswith(".npz"):
             path = path + ".npz"
-        np.savez(path, **payload)
+        # crash-safe: a SIGKILL mid-write leaves either the previous
+        # complete file or a stray .tmp — never a torn index at `path`
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        fsync_dir(os.path.dirname(path))
         return path
 
     def load(self, path: str) -> RetrieverState:
@@ -792,7 +834,22 @@ class IndexBackend:
             else:
                 aux = None
             names = sorted(n for n in z.files if n.startswith("leaf_"))
-            leaves = [jnp.asarray(z[n]) for n in names]
+            host_leaves = [z[n] for n in names]
+            if "checksums" in z.files:
+                crcs = np.asarray(z["checksums"], np.uint32)
+                if crcs.size != len(names):
+                    raise ValueError(
+                        f"index file {path!r} carries {crcs.size} checksums "
+                        f"for {len(names)} arrays — truncated manifest")
+                for name, arr, want in zip(names, host_leaves, crcs):
+                    got = leaf_crc32(arr)
+                    if got != int(want):
+                        raise ValueError(
+                            f"index file {path!r}: checksum mismatch on "
+                            f"array {name!r} (crc32 {got:#010x} != stored "
+                            f"{int(want):#010x}) — the file is corrupt; "
+                            "restore from a previous complete save")
+            leaves = [jnp.asarray(a) for a in host_leaves]
         treedef = jax.tree_util.tree_structure(self._template(aux, n_seg))
         if treedef.num_leaves != len(leaves):
             raise ValueError(

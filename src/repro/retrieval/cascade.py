@@ -126,6 +126,63 @@ class CascadeBackend(IndexBackend):
                                            scan=scan)
         return ff_b.search_candidates(ff_v, query, ids2, k=k, scan=scan)
 
+    # -- graceful degradation (serving overload ladder) ---------------------
+
+    def with_budgets(self, state: RetrieverState, p1: int,
+                     p2: int) -> RetrieverState:
+        """Same member arrays, different static (p1, p2) stage budgets.
+
+        Budgets are static pytree aux, so the replaced state keys a
+        distinct jit signature while sharing every device buffer — the
+        degradation ladder's rungs are O(1) to derive and pre-compile.
+        """
+        s = state.backend_state
+        return state._replace(
+            backend_state=CascadeState(s.members, int(p1), int(p2)))
+
+    def degrade_rungs(self, state: RetrieverState, *, k: int,
+                      max_levels: int = 3) -> Tuple:
+        """Budget rungs below the configured (p1, p2), coarsest last.
+
+        Each rung halves both budgets (floored at p1 >= 2k, p2 >= k so a
+        degraded response still ranks a full top-k); the final ``None``
+        rung is the hamming-only floor (`search_prefilter`). The returned
+        tuple is a *closed* set: serving pre-compiles exactly these
+        signatures and the recompile sentry holds them, so stepping down
+        under overload never mints an off-ladder compile.
+        """
+        s = state.backend_state
+        rungs: list = []
+        p1, p2 = int(s.p1), int(s.p2)
+        while len(rungs) < max(0, max_levels - 1):
+            nxt = (max(p1 // 2, 2 * k), max(p2 // 2, k))
+            if nxt == (p1, p2):
+                break
+            p1, p2 = nxt
+            rungs.append(nxt)
+        rungs.append(None)
+        return tuple(rungs)
+
+    def search_prefilter(self, state: RetrieverState, query: Query, *,
+                         k: int, scan=None) -> Tuple[Array, Array]:
+        """Degradation floor: answer from stage 1 alone (float32 scores)."""
+        ham_b, ham_v = self._views(state)[0]
+        sh = ham_v.backend_state
+        q_codes = ham_b._q_codes(ham_v, query)
+        seg = ham_b._segmented(ham_v)
+        target = seg if seg is not None else sh.index
+        return index_mod.search_hamming_floor(
+            target, q_codes, query.mask, bits=sh.bits, k=k, scan=scan)
+
+    def search_degraded(self, state: RetrieverState, query: Query, *,
+                        k: int, rung, scan=None) -> Tuple[Array, Array]:
+        """Serve one degradation rung: a (p1, p2) pair from
+        `degrade_rungs`, or None for the hamming-only floor."""
+        if rung is None:
+            return self.search_prefilter(state, query, k=k, scan=scan)
+        return self.search(self.with_budgets(state, *rung), query, k=k,
+                           scan=scan)
+
     # -- mutation (member-wise composition) ---------------------------------
 
     def _segmented(self, state: RetrieverState):

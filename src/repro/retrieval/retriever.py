@@ -86,6 +86,35 @@ class Retriever:
             return self._rerank(state, pruned, scores, ids, k=k)
         return scores[:, :k], ids[:, :k]
 
+    def degrade_rungs(self, state: RetrieverState, *, k: int) -> Tuple:
+        """Overload degradation rungs for serving (docs/design.md §11).
+
+        Empty for backends without a quality-for-latency ladder; the
+        cascade returns its budget halvings ending at the hamming-only
+        floor (None)."""
+        backend = self.backend
+        if not hasattr(backend, "degrade_rungs"):
+            return ()
+        return backend.degrade_rungs(state, k=k)
+
+    def search_degraded(self, state: RetrieverState, query: Query, *,
+                        k: int, rung) -> Tuple[Array, Array]:
+        """Degraded online query: same query-side pruning, cheaper funnel.
+
+        `rung` comes from `degrade_rungs`. Degraded stages return their
+        own (exact-enough) scores — no quantized rerank on top: the whole
+        point of stepping down is shedding compute.
+        """
+        cfg, backend = self.cfg, self.backend
+        q_emb, q_mask = query.embeddings, query.mask
+        if cfg.prune_side in ("query", "both"):
+            pr = pruning.prune_topp(q_emb, query.salience, q_mask, p=cfg.p)
+            q_emb, q_mask = pr.embeddings, pr.mask
+        pruned = Query(q_emb, q_mask, query.salience)
+        scores, ids = backend.search_degraded(state, pruned, k=k, rung=rung,
+                                              scan=cfg.scan)
+        return scores[:, :k], ids[:, :k]
+
     def _rerank(self, state: RetrieverState, query: Query, scores: Array,
                 ids: Array, *, k: int) -> Tuple[Array, Array]:
         safe = jnp.maximum(ids, 0)

@@ -2,6 +2,11 @@
 
 from repro.serving.client import drive  # noqa: F401
 from repro.serving.live import LiveIndexSession  # noqa: F401
+from repro.serving.resilience import (DeadlineExceeded,  # noqa: F401
+                                      DegradationController,
+                                      DispatcherFailed, FaultInjected,
+                                      FaultInjector, Overloaded,
+                                      ResilienceConfig)
 from repro.serving.server import (AsyncRetrievalServer,  # noqa: F401
                                   RetrievalServer, ServeConfig, ServerClosed,
-                                  padding_ladder)
+                                  Served, padding_ladder)

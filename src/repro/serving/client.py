@@ -13,7 +13,8 @@ import numpy as np
 
 async def drive(server, q_embs, q_masks, q_sals,
                 n_requests: Optional[int] = None, rate_qps: float = 0.0,
-                seed: int = 0):
+                seed: int = 0, deadline_ms: Optional[float] = None,
+                slo: str = "interactive", return_exceptions: bool = False):
     """Submit queries through ``server.query``; returns results in
     submission order.
 
@@ -22,15 +23,27 @@ async def drive(server, q_embs, q_masks, q_sals,
     open-loop Poisson arrival process at that rate — arrivals land at
     exponential gaps regardless of completions, the honest way to
     measure tail latency.
+
+    ``deadline_ms``/``slo`` propagate per request to a resilient server.
+    With ``return_exceptions=True`` per-request outcomes come back in
+    place (`Served` tuple, `Overloaded`, `DeadlineExceeded`, ...) so an
+    overload drill can assert that *every* request resolved; admission
+    rejections are raised at submit time and still land in the slot.
     """
     rng = np.random.default_rng(seed)
     n = len(q_embs) if n_requests is None else n_requests
     nq = len(q_embs)
+    kw = {}
+    if deadline_ms is not None:
+        kw["deadline_ms"] = deadline_ms
+    if slo != "interactive":
+        kw["slo"] = slo
     tasks = []
     for i in range(n):
         j = i % nq
         tasks.append(asyncio.ensure_future(
-            server.query(q_embs[j], q_masks[j], q_sals[j])))
+            server.query(q_embs[j], q_masks[j], q_sals[j], **kw)))
         if rate_qps > 0:
             await asyncio.sleep(rng.exponential(1.0 / rate_qps))
-    return await asyncio.gather(*tasks)
+    return await asyncio.gather(*tasks,
+                                return_exceptions=return_exceptions)

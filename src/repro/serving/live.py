@@ -65,7 +65,30 @@ class LiveIndexSession:
             # read once: the batch runs entirely against this state
             return self._jsearch(self._state, q, qm, qs)
 
-        self.server = RetrievalServer(search_fn, cfg)
+        # degradation ladder (overload response, docs/design.md §11): one
+        # jitted function per rung below the configured budgets. The rung
+        # is baked into each closure; the STATE stays an argument, so
+        # mutations swap through the same O(log N) shape registry and the
+        # degraded levels never recompile per publish.
+        self.degrade_rungs: Tuple = ()
+        if cfg.resilience is not None:
+            self.degrade_rungs = retriever.degrade_rungs(self._state,
+                                                         k=self.top_k)
+
+        def _make_degraded(rung):
+            def _dsearch(st, q, qm, qs):
+                return retriever.search_degraded(
+                    st, Query(q, qm, qs), k=self.top_k, rung=rung)
+
+            jfn = jax.jit(_dsearch)
+
+            def degraded_fn(q, qm, qs):
+                return jfn(self._state, q, qm, qs)
+
+            return degraded_fn
+
+        degraded_fns = tuple(_make_degraded(r) for r in self.degrade_rungs)
+        self.server = RetrievalServer(search_fn, cfg, degraded_fns)
 
     # -- state registry ------------------------------------------------------
 
@@ -112,14 +135,19 @@ class LiveIndexSession:
 
     # -- serving passthrough -------------------------------------------------
 
-    def query(self, q_emb, q_mask, q_sal, timeout: float = 30.0):
-        return self.server.query(q_emb, q_mask, q_sal, timeout=timeout)
+    def query(self, q_emb, q_mask, q_sal, timeout: float = 30.0, *,
+              deadline_ms=None, slo="interactive"):
+        return self.server.query(q_emb, q_mask, q_sal, timeout=timeout,
+                                 deadline_ms=deadline_ms, slo=slo)
 
-    def submit(self, q_emb, q_mask, q_sal):
-        return self.server.submit(q_emb, q_mask, q_sal)
+    def submit(self, q_emb, q_mask, q_sal, *, deadline_ms=None,
+               slo="interactive"):
+        return self.server.submit(q_emb, q_mask, q_sal,
+                                  deadline_ms=deadline_ms, slo=slo)
 
-    def warm_shapes(self, q_emb, q_mask, q_sal, rungs=None) -> None:
-        self.server.warm_shapes(q_emb, q_mask, q_sal, rungs)
+    def warm_shapes(self, q_emb, q_mask, q_sal, rungs=None,
+                    levels=None) -> None:
+        self.server.warm_shapes(q_emb, q_mask, q_sal, rungs, levels)
 
     def stats(self) -> Dict[str, Any]:
         return self.server.stats()

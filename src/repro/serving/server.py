@@ -14,11 +14,28 @@ jitted search runs in a bounded executor; ``jax.block_until_ready`` happens
 only at fan-out, off the event loop, so percentiles include device time but
 the loop never blocks on it.
 
+Fault tolerance (v3, opt-in via ``ServeConfig.resilience``) threads the
+`repro.serving.resilience` controllers through the loop: per-request
+deadlines (expired items are dropped before staging and cancelled at
+fan-out), bounded admission with explicit `Overloaded` rejection and
+per-SLO-class token buckets, a degradation ladder that serves overload
+bursts from pre-compiled cheaper search functions (`degraded_fns` — the
+cascade's smaller (p1, p2) rungs down to hamming-only) and steps back up
+under hysteresis, a watchdog that restarts a dead/hung dispatcher and
+fails its claimed requests with `DispatcherFailed`, and a `FaultInjector`
+with named sites (dispatch/stage/compute/fanout) driving the chaos suite.
+Every successful response is a `Served` tuple tagged with the degradation
+level that produced it. The degraded functions are part of the recompile
+sentry's declared signature set — shedding and degrading never mint an
+off-ladder compile.
+
 `RetrievalServer` is the thin sync facade (thread-backed event loop) kept so
 v1 call sites — ``submit`` returning a waitable request, blocking ``query`` —
 keep working unchanged. ``close`` drains: in-flight batches complete and
 deliver real results; requests still queued get a terminal `ServerClosed`
-error instead of hanging until their client-side timeout.
+error instead of hanging until their client-side timeout. A facade
+``query`` that times out *cancels* its queued item (and counts it in
+``stats()["timeouts"]``) so abandoned requests stop occupying batch slots.
 
 Latency percentiles (p50/p99) are tracked per request, matching the paper's
 Table IV metric definitions; ``stats()`` additionally reports per-ladder-rung
@@ -27,19 +44,40 @@ batch occupancy so under-filled compiled shapes are visible.
 from __future__ import annotations
 
 import asyncio
+import collections
 import dataclasses
+import logging
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serving.resilience import (AdmissionController,
+                                      DeadlineExceeded,
+                                      DegradationController,
+                                      DispatcherFailed, FaultInjector,
+                                      Overloaded, ResilienceConfig)
+
+logger = logging.getLogger(__name__)
+
 
 class ServerClosed(RuntimeError):
     """Terminal error set on requests the server will never serve."""
+
+
+class Served(tuple):
+    """A ``(scores, ids)`` result tagged with the degradation level that
+    served it (0 = full quality). Unpacks as a plain 2-tuple, so existing
+    ``scores, ids = await server.query(...)`` call sites are unchanged."""
+
+    def __new__(cls, pair, level: int = 0):
+        self = tuple.__new__(cls, pair)
+        self.level = int(level)
+        return self
 
 
 def padding_ladder(max_batch: int) -> Tuple[int, ...]:
@@ -69,11 +107,15 @@ class ServeConfig:
     # disables the overlap.
     max_inflight: int = 2
     # Wrap search_fn in a repro.analysis RecompileSentry: every call's
-    # (B, Mq, dtypes) signature is recorded, batches whose B is not a
-    # ladder rung raise RecompileGuardError instead of silently minting a
+    # (B, Mq, dtypes, level) signature is recorded, batches whose B is not
+    # a ladder rung raise RecompileGuardError instead of silently minting a
     # new compiled shape, and `recompile_report()` exposes the signature
     # set for the exact-rung-set assertion in tests/soaks.
     guard_recompiles: bool = False
+    # Fault-tolerant serving (docs/design.md §11): deadlines, bounded
+    # admission + load shedding, degradation ladder, watchdog. None keeps
+    # the pre-v3 behaviour (unbounded queue, no deadlines, no watchdog).
+    resilience: Optional[ResilienceConfig] = None
 
     def resolved_ladder(self) -> Tuple[int, ...]:
         if self.ladder is None:
@@ -91,12 +133,17 @@ class ServeConfig:
 class _Item:
     """One queued query inside the asyncio server."""
 
-    __slots__ = ("q_emb", "q_mask", "q_sal", "future", "t_enqueue")
+    __slots__ = ("q_emb", "q_mask", "q_sal", "future", "t_enqueue",
+                 "deadline", "slo")
 
-    def __init__(self, q_emb, q_mask, q_sal, future, t_enqueue):
+    def __init__(self, q_emb, q_mask, q_sal, future, t_enqueue,
+                 deadline=None, slo="interactive"):
         self.q_emb, self.q_mask, self.q_sal = q_emb, q_mask, q_sal
         self.future = future
         self.t_enqueue = t_enqueue
+        # absolute time.perf_counter() deadline, or None
+        self.deadline = deadline
+        self.slo = slo
 
 
 _STOP = object()
@@ -107,10 +154,17 @@ class AsyncRetrievalServer:
 
     Bind to one event loop: the first ``query`` (or an explicit ``start``)
     captures the running loop; all queries must come from that loop.
+
+    ``degraded_fns`` is an ordered sequence of cheaper search functions
+    (same signature/output shapes as ``search_fn``); level L > 0 of the
+    degradation ladder serves from ``degraded_fns[L - 1]``. They must be
+    pre-compiled shapes of the same ladder (see `LiveIndexSession` /
+    `cascade.degrade_rungs`) so stepping down never compiles.
     """
 
-    def __init__(self, search_fn: Callable, cfg: ServeConfig):
-        self.search_fn = search_fn
+    def __init__(self, search_fn: Callable, cfg: ServeConfig,
+                 degraded_fns: Sequence[Callable] = ()):
+        self.search_fns: List[Callable] = [search_fn, *degraded_fns]
         self.cfg = cfg
         self.ladder = cfg.resolved_ladder()
         self.recompile_sentry = None
@@ -118,16 +172,29 @@ class AsyncRetrievalServer:
             from repro.analysis.recompile import RecompileSentry
             rungs = set(self.ladder)
 
-            def serve_signature(q, qm, qs):
-                return (int(q.shape[0]), int(q.shape[1]), str(q.dtype),
-                        str(qm.dtype), str(qs.dtype))
+            def _serve(q, qm, qs, level=0):
+                return self.search_fns[level](q, qm, qs)
 
+            def _cache_size():
+                return sum(fn._cache_size()
+                           for fn in self.search_fns
+                           if hasattr(fn, "_cache_size"))
+
+            _serve._cache_size = _cache_size
+
+            def serve_signature(q, qm, qs, level=0):
+                # B stays at position 0: tests and reports key rungs off
+                # sig[0]; the degradation level rides at the end
+                return (int(q.shape[0]), int(q.shape[1]), str(q.dtype),
+                        str(qm.dtype), str(qs.dtype), int(level))
+
+            n_levels = len(self.search_fns)
             self.recompile_sentry = RecompileSentry(
-                search_fn, name="serve.search_fn", key_fn=serve_signature,
-                allowed=lambda key: key[0] in rungs)
-            self.search_fn = self.recompile_sentry
+                _serve, name="serve.search_fn", key_fn=serve_signature,
+                allowed=lambda key: key[0] in rungs and key[-1] < n_levels)
         self._queue: Optional[asyncio.Queue] = None
         self._dispatcher: Optional[asyncio.Task] = None
+        self._watchdog_task: Optional[asyncio.Task] = None
         self._inflight: Optional[asyncio.Semaphore] = None
         self._fanout_tasks: set = set()
         self._pool = ThreadPoolExecutor(
@@ -138,6 +205,17 @@ class AsyncRetrievalServer:
         self._closed = False
         # (B, Mq) shapes that have gone through the jit cache at least once
         self._warmed: set = set()
+        # -- resilience (all None/no-op when cfg.resilience is None) --
+        res = cfg.resilience
+        self.fault_injector = FaultInjector()
+        self._admission = AdmissionController(res) if res else None
+        self._degrade = (DegradationController(len(self.search_fns), res)
+                         if res else None)
+        # items dequeued by the dispatcher but not yet handed to fan-out;
+        # the watchdog fails these with DispatcherFailed on restart.
+        # Loop-confined (only the event loop touches it) — no lock.
+        self._claimed: Dict[_Item, float] = {}
+        self._beat = 0.0  # dispatcher heartbeat (loop.time())
         # -- stats (threading lock: read from facade threads, written from
         # fan-out tasks; the wall-clock span invariant is the same as v1:
         # qps = requests / (first enqueue -> last completion), never the sum
@@ -147,6 +225,11 @@ class AsyncRetrievalServer:
         self.batch_sizes: List[int] = []
         self._rung_counts: Dict[int, int] = {}
         self._rung_occupied: Dict[int, int] = {}
+        self._level_served: Dict[int, int] = {}
+        self._recent_lat: collections.deque = collections.deque(maxlen=256)
+        self._n_timeouts = 0
+        self._n_deadline_expired = 0
+        self._n_watchdog_restarts = 0
         self._t_first_enqueue: Optional[float] = None
         self._t_last_done: Optional[float] = None
 
@@ -157,11 +240,13 @@ class AsyncRetrievalServer:
         if self._closed:
             raise ServerClosed("server already closed")
         if self._queue is None:
+            loop = asyncio.get_running_loop()
             self._queue = asyncio.Queue()
             self._inflight = asyncio.Semaphore(max(1, self.cfg.max_inflight))
-            self._dispatcher = asyncio.get_running_loop().create_task(
-                self._dispatch()
-            )
+            self._beat = loop.time()
+            self._dispatcher = loop.create_task(self._dispatch())
+            if self.cfg.resilience is not None:
+                self._watchdog_task = loop.create_task(self._watchdog())
 
     async def aclose(self) -> None:
         """Stop serving. In-flight batches complete and deliver results;
@@ -169,6 +254,10 @@ class AsyncRetrievalServer:
         if self._closed:
             return
         self._closing = True
+        if self._watchdog_task is not None:
+            self._watchdog_task.cancel()
+            await asyncio.gather(self._watchdog_task, return_exceptions=True)
+            self._watchdog_task = None
         if self._queue is not None:
             await self._queue.put(_STOP)
             # never let a dispatcher crash skip the drain below
@@ -186,28 +275,63 @@ class AsyncRetrievalServer:
             await asyncio.gather(
                 *list(self._fanout_tasks), return_exceptions=True
             )
+        # a dispatcher that died mid-claim leaves orphans; never strand them
+        self._fail_claimed(ServerClosed("server closed before request ran"))
         self._pool.shutdown(wait=True)
         self._closed = True
 
     # -- client API ---------------------------------------------------------
 
-    async def query(self, q_emb, q_mask, q_sal, *, _t_enqueue=None):
-        """Awaitable single-query search; returns (scores (k,), ids (k,))."""
+    async def _enqueue(self, q_emb, q_mask, q_sal, *, _t_enqueue=None,
+                       deadline_ms=None, slo="interactive") -> _Item:
+        """Admission + enqueue; returns the queued `_Item` so callers (the
+        sync facade) can cancel its future on their own timeout."""
         if self._closing or self._closed:
             raise ServerClosed("server is closed")
         await self.start()
+        if self._admission is not None:
+            reason = self._admission.admit(slo, self._queue.qsize())
+            if reason is not None:
+                raise Overloaded(reason)
+        res = self.cfg.resilience
         t_enq = time.perf_counter() if _t_enqueue is None else _t_enqueue
+        if deadline_ms is None and res is not None \
+                and res.default_deadline_ms > 0:
+            deadline_ms = res.default_deadline_ms
+        deadline = None if deadline_ms is None else t_enq + deadline_ms / 1e3
         fut = asyncio.get_running_loop().create_future()
         item = _Item(
             # client inputs are host arrays by contract — no device sync
             np.asarray(q_emb), np.asarray(q_mask), np.asarray(q_sal), fut,  # noqa: JAX05
-            t_enq,
+            t_enq, deadline, slo,
         )
         with self._lock:
             if self._t_first_enqueue is None:
                 self._t_first_enqueue = t_enq
         await self._queue.put(item)
-        return await fut
+        return item
+
+    async def query(self, q_emb, q_mask, q_sal, *, _t_enqueue=None,
+                    deadline_ms=None, slo="interactive"):
+        """Awaitable single-query search; returns (scores (k,), ids (k,)).
+
+        Raises `Overloaded` when admission sheds the request,
+        `DeadlineExceeded` when ``deadline_ms`` (or the configured
+        default) passes before results are ready. The result is a
+        `Served` tuple carrying ``.level``.
+        """
+        item = await self._enqueue(
+            q_emb, q_mask, q_sal, _t_enqueue=_t_enqueue,
+            deadline_ms=deadline_ms, slo=slo,
+        )
+        try:
+            return await item.future
+        except asyncio.CancelledError:
+            # caller abandoned the wait: kill the queued item too so it
+            # stops occupying a batch slot
+            if not item.future.done():
+                item.future.cancel()
+            raise
 
     def rung_for(self, n: int) -> int:
         """Smallest ladder rung that fits a batch of n requests."""
@@ -216,22 +340,27 @@ class AsyncRetrievalServer:
                 return b
         return self.ladder[-1]
 
-    def warm_shapes(self, q_emb, q_mask, q_sal, rungs=None) -> None:
+    def warm_shapes(self, q_emb, q_mask, q_sal, rungs=None,
+                    levels=None) -> None:
         """Pre-compile ladder rungs for one query geometry (blocking).
 
         Takes a single example query (Mq, D); tiles it to each rung and runs
-        the jitted search once so serving never pays a compile stall.
+        the jitted search once so serving never pays a compile stall. All
+        degradation levels are warmed by default — stepping down the
+        quality ladder under overload must never stall on a compile.
         """
         q = np.asarray(q_emb)
         qm = np.asarray(q_mask)
         qs = np.asarray(q_sal)
+        if levels is None:
+            levels = range(len(self.search_fns))
         for b in rungs if rungs is not None else self.ladder:
-            out = self.search_fn(
-                jnp.asarray(np.broadcast_to(q, (b,) + q.shape)),
-                jnp.asarray(np.broadcast_to(qm, (b,) + qm.shape)),
-                jnp.asarray(np.broadcast_to(qs, (b,) + qs.shape)),
-            )
-            jax.block_until_ready(out)
+            qb = jnp.asarray(np.broadcast_to(q, (b,) + q.shape))
+            qmb = jnp.asarray(np.broadcast_to(qm, (b,) + qm.shape))
+            qsb = jnp.asarray(np.broadcast_to(qs, (b,) + qs.shape))
+            for level in levels:
+                out = self._call_search(level, qb, qmb, qsb)
+                jax.block_until_ready(out)
             self._warmed.add((b, q.shape[0]))
 
     @property
@@ -239,30 +368,94 @@ class AsyncRetrievalServer:
         """(B, Mq) pairs that have hit the jit compile cache."""
         return set(self._warmed)
 
-    def swap_search_fn(self, search_fn: Callable) -> None:
+    @property
+    def search_fn(self) -> Callable:
+        """The level-0 (full quality) search function."""
+        return self.search_fns[0]
+
+    @search_fn.setter
+    def search_fn(self, fn: Callable) -> None:
+        self.search_fns[0] = fn
+
+    def _call_search(self, level: int, q, qm, qs):
+        if self.recompile_sentry is not None:
+            return self.recompile_sentry(q, qm, qs, level)
+        return self.search_fns[level](q, qm, qs)
+
+    def swap_search_fn(self, search_fn: Callable,
+                       degraded_fns: Optional[Sequence[Callable]] = None,
+                       ) -> None:
         """Atomically swap the underlying search function (live index
         mutation). The recompile sentry — and its signature history — stays
         in place: the serving ladder's compiled rung set is a property of
         the *server*, and a swapped-in function must keep honouring it.
-        Batches already staged finish on whichever function they read."""
-        if self.recompile_sentry is not None:
-            self.recompile_sentry.fn = search_fn
-        else:
-            self.search_fn = search_fn
+        Batches already staged finish on whichever function they read.
+
+        When the server carries degradation levels, pass matching
+        ``degraded_fns`` built from the same new state — the level count
+        is fixed at construction (it sizes the degradation controller).
+        """
+        if degraded_fns is not None:
+            if len(degraded_fns) + 1 != len(self.search_fns):
+                raise ValueError(
+                    f"got {len(degraded_fns)} degraded fns for a server "
+                    f"with {len(self.search_fns) - 1} degraded levels"
+                )
+            self.search_fns[1:] = list(degraded_fns)
+        self.search_fns[0] = search_fn
 
     # -- dispatcher ---------------------------------------------------------
+
+    def _resolve_exc(self, item: _Item, exc: BaseException) -> None:
+        self._claimed.pop(item, None)
+        if not item.future.done():
+            item.future.set_exception(exc)
+
+    def _fail_claimed(self, exc: BaseException) -> None:
+        for it in list(self._claimed):
+            self._resolve_exc(it, exc)
+
+    def _drop_stale(self, item: _Item) -> bool:
+        """Drop cancelled/expired items before they occupy a batch slot."""
+        if item.future.done():
+            # client cancelled (sync facade timeout / abandoned await)
+            self._claimed.pop(item, None)
+            return True
+        if item.deadline is not None \
+                and time.perf_counter() >= item.deadline:
+            with self._lock:
+                self._n_deadline_expired += 1
+            self._resolve_exc(item, DeadlineExceeded(
+                "deadline passed while queued — dropped before staging"))
+            return True
+        return False
+
+    def _observe_level(self) -> int:
+        """One degradation-controller observation per coalesced batch."""
+        if self._degrade is None:
+            return 0
+        res = self.cfg.resilience
+        depth_frac = self._queue.qsize() / max(1, res.max_queue)
+        with self._lock:
+            recent = list(self._recent_lat)
+        p99 = float(np.percentile(np.asarray(recent), 99)) if recent else 0.0
+        return self._degrade.observe(depth_frac, p99)
 
     async def _dispatch(self) -> None:
         loop = asyncio.get_running_loop()
         while True:
+            self._beat = loop.time()
             item = await self._queue.get()
+            self._beat = loop.time()
             if item is _STOP:
                 return
+            self._claimed[item] = time.perf_counter()
+            self.fault_injector.fire("dispatch")
             if self._closing:
-                if not item.future.done():
-                    item.future.set_exception(
-                        ServerClosed("server closed before request ran")
-                    )
+                self._resolve_exc(item, ServerClosed(
+                    "server closed before request ran"))
+                continue
+            if self._drop_stale(item):
                 continue
             batch = [item]
             stop_after = False
@@ -278,33 +471,94 @@ class AsyncRetrievalServer:
                 if nxt is _STOP:
                     stop_after = True
                     break
-                batch.append(nxt)
+                self._claimed[nxt] = time.perf_counter()
+                if not self._drop_stale(nxt):
+                    batch.append(nxt)
+            # deadlines/cancellations may have landed while coalescing
+            batch = [r for r in batch if not self._drop_stale(r)]
+            if not batch:
+                if stop_after:
+                    return
+                continue
+            level = self._observe_level()
             # bound in-flight batches (double buffer): once a slot frees we
             # stage the next batch here while the previous one still computes
             await self._inflight.acquire()
+            # the wait for a slot can be long under load: re-check for
+            # cancellations/deadlines that landed during it
+            batch = [r for r in batch if not self._drop_stale(r)]
+            if not batch:
+                self._inflight.release()
+                if stop_after:
+                    return
+                continue
             try:
-                staged = self._stage(batch)
+                staged = self._stage(batch, level)
             except Exception as e:  # noqa: BLE001 - e.g. mixed-shape batch
                 # fail this batch but keep the dispatcher alive: a staging
                 # error (say, two coalesced queries with different Mq) must
                 # not strand every later request on a dead queue
                 self._inflight.release()
                 for r in batch:
-                    if not r.future.done():
-                        r.future.set_exception(e)
+                    self._resolve_exc(r, e)
                 if stop_after:
                     return
                 continue
-            task = loop.create_task(self._fanout(batch, *staged))
+            for r in batch:
+                # handed to fan-out, which owns resolution from here; the
+                # watchdog only covers the dequeue->stage window
+                self._claimed.pop(r, None)
+            task = loop.create_task(self._fanout(batch, level, *staged))
             self._fanout_tasks.add(task)
             task.add_done_callback(self._fanout_tasks.discard)
             if stop_after:
                 return
 
-    def _stage(self, batch: List[_Item]):
+    async def _watchdog(self) -> None:
+        """Detect a dead or hung dispatcher, restart it, and fail the
+        requests it had claimed with `DispatcherFailed` instead of letting
+        them hang. Runs only when `ServeConfig.resilience` is set."""
+        res = self.cfg.resilience
+        loop = asyncio.get_running_loop()
+        while not (self._closing or self._closed):
+            await asyncio.sleep(res.watchdog_interval_s)
+            if self._closing or self._closed:
+                return
+            d = self._dispatcher
+            if d is None:
+                continue
+            if d.done():
+                err = None if d.cancelled() else d.exception()
+                logger.error("serve dispatcher died (%r); restarting", err)
+                self._restart_dispatcher(loop, DispatcherFailed(
+                    f"dispatcher died ({err!r}) while this request was "
+                    "claimed; restarted by watchdog"))
+                continue
+            pending = bool(self._claimed) or self._queue.qsize() > 0
+            if pending and (loop.time() - self._beat) > res.stall_timeout_s:
+                logger.error(
+                    "serve dispatcher hung (heartbeat %.1fs stale, "
+                    "%d claimed, depth %d); restarting",
+                    loop.time() - self._beat, len(self._claimed),
+                    self._queue.qsize())
+                d.cancel()
+                await asyncio.gather(d, return_exceptions=True)
+                self._restart_dispatcher(loop, DispatcherFailed(
+                    "dispatcher hung past stall_timeout_s while this "
+                    "request was claimed; restarted by watchdog"))
+
+    def _restart_dispatcher(self, loop, exc: DispatcherFailed) -> None:
+        self._fail_claimed(exc)
+        with self._lock:
+            self._n_watchdog_restarts += 1
+        self._beat = loop.time()
+        self._dispatcher = loop.create_task(self._dispatch())
+
+    def _stage(self, batch: List[_Item], level: int = 0):
         """Host staging: pad to the ladder rung and start the host->device
         transfer. Runs on the event loop, overlapped with the previous
         batch's device compute."""
+        self.fault_injector.fire("stage")
         rung = self.rung_for(len(batch))
         first = batch[0]
         q = np.zeros((rung,) + first.q_emb.shape, first.q_emb.dtype)
@@ -315,11 +569,13 @@ class AsyncRetrievalServer:
         self._warmed.add((rung, first.q_emb.shape[0]))
         return rung, jnp.asarray(q), jnp.asarray(qm), jnp.asarray(qs)
 
-    async def _fanout(self, batch: List[_Item], rung: int, q, qm, qs) -> None:
+    async def _fanout(self, batch: List[_Item], level: int, rung: int,
+                      q, qm, qs) -> None:
         loop = asyncio.get_running_loop()
 
         def _compute():
-            out = self.search_fn(q, qm, qs)
+            self.fault_injector.fire("compute")
+            out = self._call_search(level, q, qm, qs)
             jax.block_until_ready(out)  # only blocking point, off the loop
             # device->host transfer stays on the executor thread too: done
             # on the event loop it head-of-line blocked every coalesced
@@ -328,10 +584,10 @@ class AsyncRetrievalServer:
 
         try:
             scores, ids = await loop.run_in_executor(self._pool, _compute)
+            self.fault_injector.fire("fanout")
         except Exception as e:  # noqa: BLE001 - forwarded to every waiter
             for r in batch:
-                if not r.future.done():
-                    r.future.set_exception(e)
+                self._resolve_exc(r, e)
             self._inflight.release()
             return
         now = time.perf_counter()
@@ -348,13 +604,47 @@ class AsyncRetrievalServer:
                 # span/latency invariant holds
                 self._t_first_enqueue = min(r.t_enqueue for r in batch)
             for r in batch:
-                self.latencies_ms.append((now - r.t_enqueue) * 1e3)
+                lat_ms = (now - r.t_enqueue) * 1e3
+                self.latencies_ms.append(lat_ms)
+                self._recent_lat.append(lat_ms)
         for i, r in enumerate(batch):
+            if r.deadline is not None and now >= r.deadline:
+                # result arrived, but nobody is waiting for it anymore
+                with self._lock:
+                    self._n_deadline_expired += 1
+                self._resolve_exc(r, DeadlineExceeded(
+                    "deadline passed during compute"))
+                continue
             if not r.future.done():
-                r.future.set_result((scores[i], ids[i]))
+                r.future.set_result(Served((scores[i], ids[i]), level))
+                with self._lock:
+                    self._level_served[level] = (
+                        self._level_served.get(level, 0) + 1
+                    )
         self._inflight.release()
 
     # -- stats --------------------------------------------------------------
+
+    def _resilience_stats(self) -> Dict[str, Any]:
+        """Caller holds self._lock. The timeout counter is unconditional
+        (sync-facade timeouts cancel their queued item on any server); the
+        overload/degradation counters only exist on a guarded server."""
+        out: Dict[str, Any] = {"timeouts": self._n_timeouts}
+        if self.cfg.resilience is None:
+            return out
+        shed = (self._admission.stats() if self._admission is not None
+                else {"interactive": 0, "batch": 0})
+        out.update({
+            "deadline_expired": self._n_deadline_expired,
+            "shed": sum(shed.values()),
+            "shed_interactive": shed["interactive"],
+            "shed_batch": shed["batch"],
+            "degrade_level": (self._degrade.level
+                              if self._degrade is not None else 0),
+            "level_served": dict(self._level_served),
+            "watchdog_restarts": self._n_watchdog_restarts,
+        })
+        return out
 
     def stats(self) -> Dict[str, Any]:
         with self._lock:
@@ -369,21 +659,28 @@ class AsyncRetrievalServer:
                 for b in sorted(self._rung_counts)
             }
             t0, t1 = self._t_first_enqueue, self._t_last_done
+            res = self._resilience_stats()
         if lat.size == 0:
             # no traffic yet: report zeros, never fabricated percentiles
             return {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_batch": 0.0,
-                    "qps": 0.0, "rungs": {}}
+                    "qps": 0.0, "rungs": {}, **res}
+        # span comes from monotonic first/last timestamps ONLY; the fan-out
+        # backfill keeps (lat nonempty => t0/t1 set) true even when
+        # reset_stats races a completing batch, so a missing timestamp
+        # means no completed window — report qps 0, never a value derived
+        # from summed overlapping latencies
         if t0 is None or t1 is None:
-            span_s = max(float(np.sum(lat)) / 1e3, 1e-9)  # degraded
+            qps = 0.0
         else:
-            span_s = max(t1 - t0, 1e-9)
+            qps = lat.size / max(t1 - t0, 1e-9)
         return {
             "n": int(lat.size),
             "p50_ms": float(np.percentile(lat, 50)),
             "p99_ms": float(np.percentile(lat, 99)),
             "mean_batch": float(np.mean(batch_sizes)) if batch_sizes else 0.0,
-            "qps": lat.size / span_s,
+            "qps": qps,
             "rungs": rungs,
+            **res,
         }
 
     def recompile_report(self) -> Optional[Dict[str, Any]]:
@@ -395,28 +692,40 @@ class AsyncRetrievalServer:
 
     def reset_stats(self) -> None:
         """Drop recorded latencies and the serving window (e.g. after a
-        warmup/compile request, which would otherwise skew qps)."""
+        warmup/compile request, which would otherwise skew qps). Resilience
+        counters reset too, except watchdog_restarts (lifetime health)."""
         with self._lock:
             self.latencies_ms = []
             self.batch_sizes = []
             self._rung_counts = {}
             self._rung_occupied = {}
+            self._level_served = {}
+            self._recent_lat.clear()
+            self._n_timeouts = 0
+            self._n_deadline_expired = 0
             self._t_first_enqueue = None
             self._t_last_done = None
+        if self._admission is not None:
+            self._admission.reset()
 
 
 class _Request:
     """v1 request handle: wait on ``event``, read ``result`` / ``error``."""
 
     __slots__ = ("q_emb", "q_mask", "q_sal", "event", "result", "error",
-                 "t_enqueue")
+                 "t_enqueue", "deadline_ms", "slo", "item", "abandoned")
 
-    def __init__(self, q_emb, q_mask, q_sal):
+    def __init__(self, q_emb, q_mask, q_sal, deadline_ms=None,
+                 slo="interactive"):
         self.q_emb, self.q_mask, self.q_sal = q_emb, q_mask, q_sal
         self.event = threading.Event()
         self.result = None
         self.error: Optional[BaseException] = None
         self.t_enqueue = time.perf_counter()
+        self.deadline_ms = deadline_ms
+        self.slo = slo
+        self.item: Optional[_Item] = None   # set once enqueued (loop thread)
+        self.abandoned = False              # set by the facade's timeout
 
 
 class RetrievalServer:
@@ -426,10 +735,11 @@ class RetrievalServer:
     ``query`` — so existing call sites work unchanged while the serving
     core is asyncio."""
 
-    def __init__(self, search_fn: Callable, cfg: ServeConfig):
+    def __init__(self, search_fn: Callable, cfg: ServeConfig,
+                 degraded_fns: Sequence[Callable] = ()):
         self.search_fn = search_fn
         self.cfg = cfg
-        self._async = AsyncRetrievalServer(search_fn, cfg)
+        self._async = AsyncRetrievalServer(search_fn, cfg, degraded_fns)
         self._loop = asyncio.new_event_loop()
         self._thread = threading.Thread(
             target=self._loop.run_forever, name="serve-loop", daemon=True
@@ -446,16 +756,22 @@ class RetrievalServer:
 
     # -- v1 surface ---------------------------------------------------------
 
-    def submit(self, q_emb, q_mask, q_sal) -> _Request:
+    def submit(self, q_emb, q_mask, q_sal, *, deadline_ms=None,
+               slo="interactive") -> _Request:
         req = _Request(np.asarray(q_emb), np.asarray(q_mask),
-                       np.asarray(q_sal))
+                       np.asarray(q_sal), deadline_ms, slo)
 
         async def _go():
             try:
-                req.result = await self._async.query(
+                item = await self._async._enqueue(
                     req.q_emb, req.q_mask, req.q_sal,
                     _t_enqueue=req.t_enqueue,
+                    deadline_ms=req.deadline_ms, slo=req.slo,
                 )
+                req.item = item
+                if req.abandoned and not item.future.done():
+                    item.future.cancel()
+                req.result = await item.future
             except BaseException as e:  # noqa: BLE001 - handed to waiter
                 req.error = e
             finally:
@@ -473,19 +789,43 @@ class RetrievalServer:
                 req.event.set()
         return req
 
-    def query(self, q_emb, q_mask, q_sal, timeout: float = 30.0):
-        req = self.submit(q_emb, q_mask, q_sal)
+    def cancel(self, req: _Request) -> None:
+        """Cancel a submitted request from any thread: its queued item is
+        killed on the loop (freeing the batch slot) and the abandonment is
+        counted in ``stats()["timeouts"]``."""
+        def _cancel():
+            req.abandoned = True
+            if req.item is not None and not req.item.future.done():
+                req.item.future.cancel()
+            with self._async._lock:
+                self._async._n_timeouts += 1
+
+        try:
+            self._loop.call_soon_threadsafe(_cancel)
+        except RuntimeError:
+            pass  # loop already closed: nothing left to cancel
+
+    def query(self, q_emb, q_mask, q_sal, timeout: float = 30.0, *,
+              deadline_ms=None, slo="interactive"):
+        req = self.submit(q_emb, q_mask, q_sal, deadline_ms=deadline_ms,
+                          slo=slo)
         if not req.event.wait(timeout):
+            # cancel the queued item — pre-fix it stayed enqueued and
+            # occupied a batch slot long after this client gave up
+            self.cancel(req)
             raise TimeoutError("retrieval request timed out")
         if req.error is not None:
             raise req.error
         return req.result
 
-    def warm_shapes(self, q_emb, q_mask, q_sal, rungs=None) -> None:
-        self._async.warm_shapes(q_emb, q_mask, q_sal, rungs)
+    def warm_shapes(self, q_emb, q_mask, q_sal, rungs=None,
+                    levels=None) -> None:
+        self._async.warm_shapes(q_emb, q_mask, q_sal, rungs, levels)
 
-    def swap_search_fn(self, search_fn: Callable) -> None:
-        self._async.swap_search_fn(search_fn)
+    def swap_search_fn(self, search_fn: Callable,
+                       degraded_fns: Optional[Sequence[Callable]] = None,
+                       ) -> None:
+        self._async.swap_search_fn(search_fn, degraded_fns)
 
     @property
     def ladder(self) -> Tuple[int, ...]:
@@ -506,6 +846,10 @@ class RetrievalServer:
     def recompile_sentry(self):
         return self._async.recompile_sentry
 
+    @property
+    def fault_injector(self) -> FaultInjector:
+        return self._async.fault_injector
+
     def recompile_report(self) -> Optional[Dict[str, Any]]:
         return self._async.recompile_report()
 
@@ -514,7 +858,9 @@ class RetrievalServer:
 
     def close(self):
         """Drain and stop: in-flight batches deliver results, queued
-        requests get a terminal `ServerClosed` error (no 30 s timeouts)."""
+        requests get a terminal `ServerClosed` error (no 30 s timeouts).
+        Raises RuntimeError if the serving loop thread fails to join —
+        a silent leak of a live thread is never reported as success."""
         with self._lifecycle:
             if self._closed:
                 return
@@ -524,4 +870,13 @@ class RetrievalServer:
         finally:
             self._loop.call_soon_threadsafe(self._loop.stop)
             self._thread.join(timeout=5.0)
+            if self._thread.is_alive():
+                state = (f"thread={self._thread.name!r} alive=True "
+                         f"daemon={self._thread.daemon} "
+                         f"loop_running={self._loop.is_running()}")
+                logger.error("serving loop failed to join within 5 s (%s)",
+                             state)
+                raise RuntimeError(
+                    f"serving loop thread failed to join within 5 s ({state})"
+                )
             self._loop.close()

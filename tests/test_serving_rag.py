@@ -46,8 +46,11 @@ def test_server_batches_and_matches_direct(rng):
 def test_server_stats_empty_returns_zeros():
     server = RetrievalServer(lambda q, qm, qs: (q, q), ServeConfig())
     st = server.stats()
+    # "timeouts" is the one always-on resilience counter (sync-facade
+    # timeouts cancel their queued item on any server); the overload /
+    # degradation keys only appear with ServeConfig(resilience=...)
     assert st == {"n": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_batch": 0.0,
-                  "qps": 0.0, "rungs": {}}
+                  "qps": 0.0, "rungs": {}, "timeouts": 0}
     server.close()
 
 
